@@ -1,0 +1,27 @@
+"""Paper Figure 2: sample size needed for 5% load imbalance vs p —
+sample sort (random) vs AMS scanning vs HSS (multi-round)."""
+from __future__ import annotations
+
+from repro.core import simulator as sim
+
+
+def run(eps: float = 0.05, n_per: int = 2048):
+    rows = []
+    for p in (256, 1024, 4096):
+        n = p * n_per
+
+        def ss(s, seed):
+            return sim.simulate_sample_sort_random(p, n_per, s, seed) - 1.0
+        ss_min = sim.min_sample_for_balance(ss, eps, p, n, trials=3)
+
+        def ams(s, seed):
+            ok, frac = sim.simulate_ams(p, n_per, eps, s, seed)
+            return frac - 1.0 if ok else float("inf")
+        ams_min = sim.min_sample_for_balance(ams, eps, p, n, trials=3)
+
+        hss = sim.simulate_hss(p, n_per, eps=eps, sample_per_round=5 * p)
+        rows.append((f"fig2/p{p}", None,
+                     f"samplesort={ss_min} ams={ams_min} "
+                     f"hss={hss.total_sample} (rounds={hss.rounds_used}) "
+                     f"ratio_ss_hss={ss_min / max(hss.total_sample, 1):.1f}"))
+    return rows

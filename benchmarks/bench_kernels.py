@@ -1,0 +1,35 @@
+"""Kernel-layer microbench: Pallas (interpret on CPU) numerics cross-check +
+wall time of the jnp oracles at sort-shard sizes (the quantity that scales to
+the TPU kernels; interpret-mode timing is not hardware-representative)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit
+from repro.kernels.bitonic_sort import ops as bops
+from repro.kernels.histogram import ops as hops
+from repro.kernels.histogram import ref as href
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(1 << 16).astype(np.float32))
+
+    us_ref = timeit(jax.jit(jnp.sort), x)
+    rows.append(("kernels/xla_sort_64k", round(us_ref, 1), "oracle"))
+    got = bops.block_sort(x[:4096], block=1024, interpret=True)
+    ok = bool(jnp.all(got.reshape(4, 1024)[:, 1:] >= got.reshape(4, 1024)[:, :-1]))
+    rows.append(("kernels/bitonic_block_sort", None,
+                 f"interpret-mode allclose={ok} (TPU target kernel)"))
+
+    probes = jnp.sort(x[::256])
+    us_h = timeit(jax.jit(lambda k, p: href.probe_ranks_ref(k, p)), x, probes)
+    rows.append(("kernels/histogram_ref_64k_x256", round(us_h, 1), "oracle"))
+    got = hops.probe_ranks(x[:8192], probes, tile=512, interpret=True)
+    want = href.probe_ranks_ref(x[:8192], probes)
+    rows.append(("kernels/histogram_kernel", None,
+                 f"interpret-mode equal={bool(jnp.all(got == want))}"))
+    return rows

@@ -1,0 +1,142 @@
+"""HLO-level communication volume of splitter determination on the production
+mesh — the paper's own metric (Table 2) measured from compiled programs.
+
+Lowers HSS / sample sort (random) / AMS splitter determination for p = 256
+shards against the 16x16 mesh (subprocess: needs its own 512-device jax) and
+sums per-device collective bytes. This is the framework-native validation of
+the paper's communication-complexity table.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+import jax
+import jax.numpy as jnp
+import jax.random as jr
+from jax.sharding import PartitionSpec as P
+
+import sys
+sys.path.insert(0, "src")
+from repro.core import HSSConfig
+from repro.core.splitters import hss_splitters
+from repro.core.sample_sort import random_sample_splitters
+from repro.core.ams import ams_sort_sharded, ams_sample_size
+from repro.launch.dryrun import collective_bytes
+
+P_SHARDS = 256
+N_LOCAL = 1 << 20   # 1M keys/shard => N = 268M
+mesh = jax.make_mesh((P_SHARDS,), ("sort",), devices=jax.devices()[:P_SHARDS])
+
+def lower_bytes(per_shard):
+    f = jax.jit(jax.shard_map(per_shard, mesh=mesh,
+                              in_specs=(P("sort"), P()), out_specs=P(),
+                              check_vma=False))
+    xs = jax.ShapeDtypeStruct((P_SHARDS, N_LOCAL), jnp.int32)
+    key = jax.ShapeDtypeStruct((), jax.random.key(0).dtype)
+    txt = f.lower(xs, jr.key(0)).compile().as_text()
+    return collective_bytes(txt)
+
+def hss_shard(block, key):
+    local = block.reshape(-1)
+    rng = jr.fold_in(key, jax.lax.axis_index("sort"))
+    keys, _, _ = hss_splitters(local, axis_name="sort", p=P_SHARDS,
+                               cfg=HSSConfig(eps=0.05), rng=rng)
+    return keys
+
+def ss_shard(block, key):
+    local = jnp.sort(block.reshape(-1))
+    rng = jr.fold_in(key, jax.lax.axis_index("sort"))
+    # Theorem 3.1 sample size for eps=0.05
+    total = int(2 * P_SHARDS * 28 / 0.05 ** 2)  # 2 p log2(N) / eps^2
+    keys, _ = random_sample_splitters(local, axis_name="sort", p=P_SHARDS,
+                                      total_sample=total, rng=rng)
+    return keys
+
+def ams_shard(block, key):
+    local = block.reshape(-1)
+    rng = jr.fold_in(key, jax.lax.axis_index("sort"))
+    n = N_LOCAL * P_SHARDS
+    # Lemma A.1 sample; splitter determination only (exchange excluded)
+    from repro.core.ams import scanning_splitters
+    from repro.core.common import hi_sentinel, round_up
+    total = ams_sample_size(P_SHARDS, 0.05, n)
+    cap = round_up(max(8, int(3.0 * total / P_SHARDS)), 8)
+    ls = jnp.sort(local)
+    u = jr.uniform(rng, (N_LOCAL,))
+    mask = u < total / n
+    vals = jnp.sort(jnp.where(mask, ls, hi_sentinel(ls.dtype)))[:cap]
+    probes = jnp.sort(jax.lax.all_gather(vals, "sort", tiled=True))
+    ranks = jax.lax.psum(
+        jnp.searchsorted(ls, probes, side="left").astype(jnp.int32), "sort")
+    keys, _, ok = scanning_splitters(probes, ranks, p=P_SHARDS, n=n, eps=0.05)
+    return keys
+
+def two_stage_shard():
+    # 16x16 two-stage splitter determination (paper Table 3 / Sec 6.1):
+    # stage-1 16 groups + stage-2 within-group, measured on the 2-D mesh
+    from repro.core.multistage import hss_splitters_general
+    mesh2 = jax.make_mesh((16, 16), ("outer", "inner"),
+                          devices=jax.devices()[:256])
+    def body(block, key):
+        local = jnp.sort(block.reshape(-1))
+        me = jax.lax.axis_index("outer") * 16 + jax.lax.axis_index("inner")
+        rng = jr.fold_in(key, me)
+        g, _, _ = hss_splitters_general(
+            local, axis_names=("outer", "inner"), num_shards=256,
+            num_parts=16, cfg=HSSConfig(eps=0.05), rng=rng)
+        s, _, _ = hss_splitters_general(
+            local, axis_names="inner", num_shards=16, num_parts=16,
+            cfg=HSSConfig(eps=0.05), rng=jr.fold_in(rng, 1))
+        return g, s
+    f = jax.jit(jax.shard_map(body, mesh=mesh2,
+                              in_specs=(P("outer", "inner"), P()),
+                              out_specs=(P(), P()), check_vma=False))
+    xs = jax.ShapeDtypeStruct((16, 16, N_LOCAL), jnp.int32)
+    key = jax.ShapeDtypeStruct((), jax.random.key(0).dtype)
+    txt = f.lower(xs, jr.key(0)).compile().as_text()
+    return collective_bytes(txt)
+
+out = {}
+out["hss"] = lower_bytes(hss_shard)
+out["samplesort"] = lower_bytes(ss_shard)
+out["ams"] = lower_bytes(ams_shard)
+out["hss_2stage"] = two_stage_shard()
+print("JSON:" + json.dumps(out))
+"""
+
+
+def run():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=540)
+    rows = []
+    for line in proc.stdout.splitlines():
+        if line.startswith("JSON:"):
+            data = json.loads(line[5:])
+            h = data["hss"]["total_bytes"]
+            s = data["samplesort"]["total_bytes"]
+            a = data["ams"]["total_bytes"]
+            t2 = data["hss_2stage"]["total_bytes"]
+            rows.append(("sortcoll/hss_splitters_bytes", None,
+                         f"{h} B/dev (p=256, 1M keys/shard, eps=5%)"))
+            rows.append(("sortcoll/ams_splitters_bytes", None,
+                         f"{a} B/dev ratio_vs_hss={a / max(h, 1):.1f}x "
+                         "(Lemma A.1 sample)"))
+            rows.append(("sortcoll/samplesort_splitters_bytes", None,
+                         f"{s} B/dev ratio_vs_hss={s / max(h, 1):.1f}x "
+                         "(Table 2's communication gap, from compiled HLO)"))
+            rows.append(("sortcoll/hss_2stage_bytes", None,
+                         f"{t2} B/dev (16x16 two-stage, both stages; Table 3)"))
+            return rows
+    rows.append(("sortcoll/FAILED", None,
+                 (proc.stderr or proc.stdout)[-200:].replace(",", ";")))
+    return rows

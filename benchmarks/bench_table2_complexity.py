@@ -1,0 +1,54 @@
+"""Paper Table 2: overall sample size of each partitioning algorithm.
+
+Empirical (simulator) sample sizes needed for (1+eps) balance, next to the
+paper's asymptotic formulas, at p = 4096 (CPU-friendly stand-in for the
+paper's p = 1e5 column)."""
+from __future__ import annotations
+
+import math
+
+from repro.core import simulator as sim
+
+
+def run(p: int = 4096, eps: float = 0.05, n_per: int = 4096):
+    rows = []
+    n = p * n_per
+
+    # regular sampling: deterministic s = p/eps => sample p^2/eps
+    reg = p * int(p / eps)
+    rows.append(("table2/regular_sampling_sample", None,
+                 f"p^2/eps={reg} (formula)"))
+
+    def ss(s, seed):
+        return sim.simulate_sample_sort_random(p, n_per, s, seed) - 1.0
+    ss_min = sim.min_sample_for_balance(ss, eps, p, n, trials=3)
+    rows.append(("table2/random_sampling_sample", None,
+                 f"measured={ss_min} theory=O(p log N/eps^2)="
+                 f"{int(p * math.log2(n) / eps ** 2)}"))
+
+    def ams(s, seed):
+        ok, frac = sim.simulate_ams(p, n_per, eps, s, seed)
+        return frac - 1.0 if ok else float("inf")
+    ams_min = sim.min_sample_for_balance(ams, eps, p, n, trials=3)
+    rows.append(("table2/ams_sample", None,
+                 f"measured={ams_min} theory=O(p(log p + 1/eps))="
+                 f"{int(p * (math.log(p) + 1 / eps))}"))
+
+    one = sim.simulate_hss(p, n_per, eps=eps, rounds=1, adaptive=False, seed=0)
+    rows.append(("table2/hss_1round_sample", None,
+                 f"measured={one.total_sample} theory=O(p log p/eps)="
+                 f"{int(2 * p * math.log(p) / eps)} ok={one.all_satisfied}"))
+
+    two = sim.simulate_hss(p, n_per, eps=eps, rounds=2, adaptive=False, seed=0)
+    rows.append(("table2/hss_2round_sample", None,
+                 f"measured={two.total_sample} theory=O(p sqrt(log p/eps))="
+                 f"{int(2 * p * math.sqrt(2 * math.log(p) / eps))} "
+                 f"ok={two.all_satisfied}"))
+
+    multi = sim.simulate_hss(p, n_per, eps=eps, sample_per_round=5 * p, seed=0)
+    rows.append(("table2/hss_multiround_sample", None,
+                 f"measured={multi.total_sample} rounds={multi.rounds_used} "
+                 f"theory=O(p log(log p/eps))="
+                 f"{int(p * math.log(math.log(p) / eps))} "
+                 f"ok={multi.all_satisfied}"))
+    return rows

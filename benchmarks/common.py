@@ -1,0 +1,25 @@
+"""Benchmark harness utilities. Each bench module exposes run() -> rows,
+where a row is (name, us_per_call, derived-string)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3):
+    """Median wall time per call in microseconds (blocks on jax results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def emit(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us if us is not None else ''},{derived}")

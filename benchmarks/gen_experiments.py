@@ -1,0 +1,71 @@
+"""Generate experiments/dryrun_matrix.md + experiments/roofline.csv from the
+dry-run JSON. Run after `python -m repro.launch.dryrun`."""
+from __future__ import annotations
+
+import csv
+import json
+import os
+
+from benchmarks.roofline import summary, terms
+
+
+def main(path="experiments/dryrun.json"):
+    with open(path) as f:
+        recs = json.load(f)
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    recs.sort(key=lambda r: (r["mesh"], r["arch"], order[r["shape"]]))
+
+    # ---- matrix markdown
+    lines = ["# Dry-run matrix (generated)", ""]
+    for mesh in ("16x16", "2x16x16"):
+        sub = [r for r in recs if r["mesh"] == mesh]
+        if not sub:
+            continue
+        lines += [f"## mesh {mesh} ({256 if mesh=='16x16' else 512} chips)", "",
+                  "| arch | shape | status | compile_s | peak GB/dev | "
+                  "flops/dev TF | HLO bytes/dev GB | coll GB/dev | "
+                  "AG/AR/RS/A2A/CP GB |", "|" + "---|" * 9]
+        for r in sub:
+            if r["status"] != "OK":
+                lines.append(f"| {r['arch']} | {r['shape']} | {r['status']} "
+                             "| | | | | | |")
+                continue
+            c = r["calibrated"]
+            col = c["coll"]
+            colstr = "/".join(f"{col.get(k, 0)/1e9:.1f}" for k in
+                              ("all-gather", "all-reduce", "reduce-scatter",
+                               "all-to-all", "collective-permute"))
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | OK | {r['compile_s']} | "
+                f"{r['memory']['peak_live_bytes']/1e9:.1f} | "
+                f"{c['flops']/1e12:.1f} | {c['bytes']/1e9:.0f} | "
+                f"{c['coll_total']/1e9:.1f} | {colstr} |")
+        lines.append("")
+    with open("experiments/dryrun_matrix.md", "w") as f:
+        f.write("\n".join(lines))
+
+    # ---- roofline csv (single-pod only, per the spec)
+    rows = summary(path)
+    with open("experiments/roofline.csv", "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["arch", "shape", "mesh", "status", "compute_s",
+                    "memory_s_lower", "memory_s_upper", "collective_s",
+                    "useful_s", "dominant", "roofline_fraction",
+                    "useful_over_hlo_flops", "peak_live_gb"])
+        for r in rows:
+            if r["status"] != "OK":
+                w.writerow([r["arch"], r["shape"], r["mesh"], r["status"]]
+                           + [""] * 9)
+                continue
+            w.writerow([r["arch"], r["shape"], r["mesh"], "OK",
+                        f"{r['compute_s']:.5f}", f"{r['memory_s_lower']:.5f}",
+                        f"{r['memory_s_upper']:.5f}",
+                        f"{r['collective_s']:.5f}", f"{r['useful_s']:.5f}",
+                        r["dominant"], f"{r['roofline_fraction']:.4f}",
+                        f"{r['flops_ratio']:.4f}",
+                        f"{r['peak_live_gb']:.2f}"])
+    print("wrote experiments/dryrun_matrix.md + experiments/roofline.csv")
+
+
+if __name__ == "__main__":
+    main()

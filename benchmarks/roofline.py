@@ -1,0 +1,105 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md Section
+Roofline).
+
+Per (arch x shape) cell on the single-pod mesh, using the calibrated
+whole-step per-device totals (scan bodies exactly expanded — see
+launch/dryrun.py):
+
+  compute term    = flops_per_device / peak_flops
+  memory term     = hbm_bytes_per_device / hbm_bw
+  collective term = collective_bytes_per_device / ici_bw
+
+Hardware: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
+The bottleneck is the max term; roofline fraction = useful-compute time
+(MODEL_FLOPS / chips / peak) / max-term — the score a perfect kernel+overlap
+implementation of the same parallelization would approach 1.0 on.
+
+Caveat recorded with every row: XLA:CPU "bytes accessed" is a pre-TPU-fusion
+upper bound on HBM traffic; an analytic lower bound (params+activations+cache
+traffic) is printed alongside so the memory term is a bracket, not a point.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def analytic_hbm_bytes(rec) -> float:
+    """Lower-bound HBM traffic per device: params traffic + IO arguments."""
+    mem = rec["memory"]
+    kind = {"train_4k": 3.0}.get(rec["shape"], 1.0)
+    # train: read params (fwd) + read (bwd, remat) + rw optimizer state
+    return kind * mem["argument_bytes"] + mem["output_bytes"]
+
+
+def terms(rec) -> dict:
+    cal = rec["calibrated"]
+    n_chips = rec["model"]["n_chips"]
+    compute_s = cal["flops"] / PEAK_FLOPS
+    mem_hi_s = cal["bytes"] / HBM_BW
+    mem_lo_s = analytic_hbm_bytes(rec) / HBM_BW
+    coll_s = cal["coll_total"] / ICI_BW
+    useful_s = rec["model"]["model_flops_global"] / n_chips / PEAK_FLOPS
+    if rec["shape"] in ("decode_32k", "long_500k"):
+        # decode is bandwidth-bound by construction: the fundamental floor is
+        # reading the (active) weights once per step
+        weight_read_s = (rec["model"]["params_active"] * 2 / n_chips) / HBM_BW
+        useful_s = max(useful_s, weight_read_s)
+    bottleneck_s = max(compute_s, mem_lo_s, coll_s)
+    dominant = max((("compute", compute_s), ("memory", mem_lo_s),
+                    ("collective", coll_s)), key=lambda kv: kv[1])[0]
+    return {
+        "compute_s": compute_s,
+        "memory_s_lower": mem_lo_s,
+        "memory_s_upper": mem_hi_s,
+        "collective_s": coll_s,
+        "useful_s": useful_s,
+        "dominant": dominant,
+        "roofline_fraction": useful_s / bottleneck_s if bottleneck_s else 0.0,
+        "flops_ratio": (rec["model"]["model_flops_global"] / n_chips
+                        / max(cal["flops"], 1.0)),
+    }
+
+
+def load(path: str = "experiments/dryrun.json"):
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def run(path: str = "experiments/dryrun.json", mesh: str = "16x16"):
+    rows = []
+    for rec in load(path):
+        if rec["mesh"] != mesh:
+            continue
+        name = f"roofline/{rec['arch']}/{rec['shape']}"
+        if rec["status"] != "OK":
+            rows.append((name, None, rec["status"]))
+            continue
+        t = terms(rec)
+        rows.append((name, None,
+                     f"compute={t['compute_s']:.4f}s "
+                     f"mem=[{t['memory_s_lower']:.4f};{t['memory_s_upper']:.4f}]s "
+                     f"coll={t['collective_s']:.4f}s "
+                     f"dominant={t['dominant']} "
+                     f"roofline_frac={t['roofline_fraction']:.3f} "
+                     f"useful/hlo_flops={t['flops_ratio']:.3f}"))
+    return rows
+
+
+def summary(path: str = "experiments/dryrun.json"):
+    """Machine-readable roofline table for EXPERIMENTS.md generation."""
+    out = []
+    for rec in load(path):
+        row = {"arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+               "status": rec["status"]}
+        if rec["status"] == "OK":
+            row.update(terms(rec))
+            row["peak_live_gb"] = rec["memory"]["peak_live_bytes"] / 1e9
+        out.append(row)
+    return out

@@ -1,0 +1,5 @@
+from repro.ckpt.checkpoint import (AsyncCheckpointer, latest_step,
+                                   latest_steps, restore, save)
+
+__all__ = ["AsyncCheckpointer", "latest_step", "latest_steps", "restore",
+           "save"]

@@ -1,0 +1,26 @@
+"""repro.core — Histogram Sort with Sampling and baselines.
+
+Public API:
+  hss_sort / hss_sort_sharded      the paper's algorithm (Section 4)
+  sample_sort                      random/regular sampling baselines (Sec. 3)
+  ams_sort                         single-stage AMS scanning baseline (Sec. 3.6)
+  two_stage_sort                   multi-stage HSS (Sec. 5.3/6.1)
+  simulator                        logical-p rank-space simulator
+"""
+from repro.core.common import HSSConfig, auto_rounds, final_sampling_ratio
+from repro.core.exchange import ExchangeConfig, exchange
+from repro.core.hss import SortResult, gather_sorted, hss_sort, hss_sort_sharded
+from repro.core.sample_sort import sample_sort, sample_sort_sharded
+from repro.core.ams import ams_sort, ams_sort_sharded
+from repro.core.multistage import two_stage_sort, two_stage_sort_sharded
+from repro.core.splitters import (
+    SplitterState, SplitterStats, hss_splitters, splitter_targets,
+)
+
+__all__ = [
+    "HSSConfig", "ExchangeConfig", "SortResult", "SplitterState",
+    "SplitterStats", "ams_sort", "ams_sort_sharded", "auto_rounds", "exchange",
+    "final_sampling_ratio", "gather_sorted", "hss_sort", "hss_sort_sharded",
+    "hss_splitters", "sample_sort", "sample_sort_sharded", "splitter_targets",
+    "two_stage_sort", "two_stage_sort_sharded",
+]

@@ -1,0 +1,93 @@
+"""Single-stage AMS sort baseline (paper Section 3.6, Appendix A).
+
+One Bernoulli sampling round, one histogramming round (exact probe ranks via
+psum'd searchsorted, same machinery as HSS), then the *scanning algorithm*:
+greedily assign maximal runs of sample buckets to consecutive processors so no
+processor exceeds (1+eps)N/p. Achieves a locally-balanced (not globally
+balanced) splitting with a Theta(p(log p + 1/eps)) sample (Lemma A.1).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import jax.random as jr
+
+from repro.core.common import hi_sentinel, round_up
+from repro.core.exchange import ExchangeConfig, exchange
+from repro.core.hss import SortResult, _driver
+
+
+def ams_sample_size(p: int, eps: float, n: int) -> int:
+    """Theta(p * max(2/eps, 2 log N)) per Lemma A.1."""
+    return int(p * max(2.0 / eps, 2.0 * math.log(max(n, 2))))
+
+
+def scanning_splitters(probes, probe_ranks, *, p, n, eps):
+    """AMS scanning algorithm over ranked probes (replicated, O(p) scan).
+
+    Returns (splitter_keys (p-1,), ok): ok=False if some processor would
+    exceed (1+eps)N/p (sample too small — failure mode analysed in App. A).
+    """
+    cap_load = jnp.int32(int((1.0 + eps) * n / p))
+
+    def body(b, _):
+        idx = jnp.searchsorted(probe_ranks, b + cap_load, side="right") - 1
+        idx = jnp.maximum(idx, 0)
+        nb = probe_ranks[idx]
+        advanced = nb > b
+        # not advancing is benign iff the whole remainder fits on one shard
+        ok = advanced | ((b + cap_load) >= n)
+        nb = jnp.where(advanced, nb, b)
+        return nb, (probes[idx], nb, ok)
+
+    b_last, (keys, ranks, ok) = jax.lax.scan(
+        body, jnp.int32(0), None, length=p - 1)
+    ok_all = jnp.all(ok) & ((n - b_last) <= cap_load)
+    return keys, ranks, ok_all
+
+
+def ams_sort_sharded(local, *, axis_name, p, rng, eps=0.05, total_sample=None,
+                     ex_cfg: ExchangeConfig | None = None):
+    ex_cfg = ex_cfg or ExchangeConfig()
+    local_sorted = jnp.sort(local)
+    n_local = local.shape[0]
+    n = n_local * p
+    total_sample = total_sample or ams_sample_size(p, eps, n)
+    cap = round_up(max(8, int(3.0 * total_sample / p)), 8)
+    prob = min(1.0, total_sample / float(n))
+
+    u = jr.uniform(rng, (n_local,))
+    mask = u < prob
+    n_hit = jnp.sum(mask.astype(jnp.int32))
+    vals = jnp.sort(jnp.where(mask, local_sorted, hi_sentinel(local.dtype)))[:cap]
+    ovf = jax.lax.psum(jnp.maximum(n_hit - cap, 0), axis_name)
+    probes = jnp.sort(jax.lax.all_gather(vals, axis_name, tiled=True))
+    ranks = jax.lax.psum(
+        jnp.searchsorted(local_sorted, probes, side="left").astype(jnp.int32),
+        axis_name)
+    keys, kranks, ok = scanning_splitters(probes, ranks, p=p, n=n, eps=eps)
+    out, n_valid, ex_ovf = exchange(
+        local_sorted, keys, axis_name=axis_name, p=p, cfg=ex_cfg, eps=eps)
+    return out, n_valid, keys, kranks, ovf + ex_ovf, ok
+
+
+def ams_sort(x, mesh=None, axis_name="sort", seed=0, eps=0.05,
+             total_sample=None, ex_cfg: ExchangeConfig | None = None) -> SortResult:
+    p = len(mesh.devices.reshape(-1)) if mesh is not None else len(jax.devices())
+
+    def sort_fn(local, rng):
+        o, nv, k, r, ov, ok = ams_sort_sharded(
+            local, axis_name=axis_name, p=p, rng=rng, eps=eps,
+            total_sample=total_sample, ex_cfg=ex_cfg)
+        from repro.core.splitters import SplitterStats
+        stats = SplitterStats(
+            gamma_size=jnp.zeros((1,), jnp.int32),
+            sample_count=jnp.zeros((1,), jnp.int32),
+            overflow=jnp.zeros((1,), jnp.int32),
+            n_satisfied=jnp.where(ok, p - 1, 0)[None].astype(jnp.int32),
+            rounds_used=jnp.int32(1))
+        return o, nv, k, r, ov, stats
+
+    return _driver(sort_fn, x, mesh, axis_name, seed)

@@ -1,0 +1,163 @@
+"""Key redistribution (the data-exchange phase, paper Section 3.1 step 3).
+
+Three strategies, selected by `ExchangeConfig.strategy` (DESIGN.md Section 2):
+
+  dense     capacity-padded jax.lax.all_to_all. One fused all-to-all per sort —
+            the TPU-idiomatic MPI_Alltoallv equivalent for well-spread inputs.
+            Per-(src,dst) capacity is static; overflowing keys are dropped AND
+            counted (psum), so callers can detect and re-run with a larger
+            factor. CPU-compilable => used by the multi-pod dry-run.
+  ragged    jax.lax.ragged_all_to_all — exact alltoallv. XLA:TPU only (the CPU
+            ThunkEmitter lacks the opcode as of jax 0.8.2), so it is the
+            production path on hardware but excluded from CPU tests/dry-run.
+  allgather exact and simple: gather everything, keep own range. O(N) per
+            shard; for tests, tiny meshes, and final intra-stage sorts.
+
+All strategies return a sentinel-padded, locally sorted output shard of static
+shape (out_cap,) plus the valid-key count. HSS's globally balanced splitting
+guarantees valid <= (1+eps) * N/p, which is what makes a static out_cap sound
+(this is the paper's epsilon doing real work on TPU: it bounds the buffers).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.common import hi_sentinel, round_up
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeConfig:
+    strategy: str = "dense"      # dense | ragged | allgather
+    pair_factor: float = 3.0      # dense: per-(src,dst) capacity = factor*n/p
+    out_slack: float = 1.0        # extra slack on the (1+eps) output capacity
+
+    def pair_cap(self, n_local: int, p: int) -> int:
+        return min(n_local, round_up(max(8, int(self.pair_factor * n_local / p)), 8))
+
+    def out_cap(self, n_local: int, p: int, eps: float) -> int:
+        return round_up(int((1.0 + eps) * self.out_slack * n_local) + 8, 8)
+
+
+def destination_slices(local_sorted: jax.Array, splitter_keys: jax.Array,
+                       n_valid=None):
+    """Contiguous [start, end) slice of the local sorted shard per destination.
+
+    n_valid (traced ok) excludes a sentinel-padded tail from the last slice.
+    """
+    n = local_sorted.shape[0]
+    n_valid = jnp.asarray(n if n_valid is None else n_valid, jnp.int32)
+    b = jnp.searchsorted(local_sorted, splitter_keys, side="left").astype(jnp.int32)
+    b = jnp.minimum(b, n_valid)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), b])
+    ends = jnp.concatenate([b, n_valid[None]])
+    return starts, ends - starts
+
+
+def exchange_dense(local_sorted, splitter_keys, *, axis_name, p, cfg, eps,
+                   n_valid=None):
+    n = local_sorted.shape[0]
+    cap = cfg.pair_cap(n, p)
+    out_cap = cfg.out_cap(n, p, eps)
+    sent_hi = hi_sentinel(local_sorted.dtype)
+
+    starts, counts = destination_slices(local_sorted, splitter_keys, n_valid)
+    sent_counts = jnp.minimum(counts, cap)
+    overflow = jax.lax.psum(jnp.sum(counts - sent_counts), axis_name)
+
+    idx = starts[:, None] + jnp.arange(cap, dtype=jnp.int32)[None, :]
+    valid = jnp.arange(cap, dtype=jnp.int32)[None, :] < sent_counts[:, None]
+    buf = jnp.where(valid, local_sorted[jnp.clip(idx, 0, n - 1)], sent_hi)
+
+    recv = jax.lax.all_to_all(buf, axis_name, split_axis=0, concat_axis=0,
+                              tiled=False)
+    recv_counts = jax.lax.all_to_all(
+        sent_counts.reshape(p, 1), axis_name, 0, 0, tiled=False).reshape(p)
+    merged = jnp.sort(recv.reshape(-1))
+    total = p * cap
+    if total >= out_cap:
+        out = merged[:out_cap]
+    else:
+        out = jnp.concatenate(
+            [merged, jnp.full((out_cap - total,), sent_hi, merged.dtype)])
+    n_recv = jnp.sum(recv_counts)
+    # Receive-side truncation (only possible when the splitting violated its
+    # eps guarantee, e.g. an undersized sample-sort sample) is overflow too.
+    trunc = jnp.maximum(n_recv - out_cap, 0)
+    overflow = overflow + jax.lax.psum(trunc, axis_name)
+    return out, n_recv - trunc, overflow
+
+
+def exchange_allgather(local_sorted, splitter_keys, *, axis_name, p, cfg, eps,
+                       n_valid=None):
+    n = local_sorted.shape[0]
+    out_cap = cfg.out_cap(n, p, eps)
+    sent_hi = hi_sentinel(local_sorted.dtype)
+    me = jax.lax.axis_index(axis_name)
+
+    everything = jax.lax.all_gather(local_sorted, axis_name, tiled=True)
+    real = everything != sent_hi
+    if n_valid is not None:
+        pos = jnp.arange(n, dtype=jnp.int32)
+        real_local = pos < jnp.asarray(n_valid, jnp.int32)
+        real = jax.lax.all_gather(real_local, axis_name, tiled=True)
+    lo = jnp.where(me > 0, splitter_keys[jnp.maximum(me - 1, 0)],
+                   local_sorted.dtype.type(0))
+    keep_lo = jnp.where(me > 0, everything >= lo, jnp.ones_like(everything, bool))
+    keep_hi = jnp.where(me < p - 1, everything < splitter_keys[jnp.minimum(me, p - 2)],
+                        jnp.ones_like(everything, bool))
+    keep = keep_lo & keep_hi & real
+    n_out = jnp.sum(keep.astype(jnp.int32))
+    vals = jnp.sort(jnp.where(keep, everything, sent_hi))[:out_cap]
+    trunc = jnp.maximum(n_out - out_cap, 0)
+    return vals, n_out - trunc, jax.lax.psum(trunc, axis_name)
+
+
+def exchange_ragged(local_sorted, splitter_keys, *, axis_name, p, cfg, eps,
+                    n_valid=None):
+    """Exact alltoallv via jax.lax.ragged_all_to_all. TPU-only (see module doc)."""
+    n = local_sorted.shape[0]
+    out_cap = cfg.out_cap(n, p, eps)
+    sent_hi = hi_sentinel(local_sorted.dtype)
+
+    starts, counts = destination_slices(local_sorted, splitter_keys, n_valid)
+    # recv_counts[s] = how many keys I receive from source s.
+    recv_counts = jax.lax.all_to_all(
+        counts.reshape(p, 1), axis_name, 0, 0, tiled=False).reshape(p)
+    recv_offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(recv_counts)[:-1].astype(jnp.int32)])
+    # send_offsets[d] = offset within destination d's buffer of my chunk.
+    send_offsets = jax.lax.all_to_all(
+        recv_offsets.reshape(p, 1), axis_name, 0, 0, tiled=False).reshape(p)
+    out = jnp.full((out_cap,), sent_hi, local_sorted.dtype)
+    out = jax.lax.ragged_all_to_all(
+        local_sorted, out,
+        starts.astype(jnp.int64), counts.astype(jnp.int64),
+        send_offsets.astype(jnp.int64), recv_counts.astype(jnp.int64),
+        axis_name=axis_name)
+    n_valid = jnp.sum(recv_counts)
+    # Received p sorted runs at known offsets; a full sort merges them (the
+    # run structure is also exploitable by the bitonic merge kernel).
+    out = jnp.sort(out)
+    return out, n_valid, jnp.zeros((), jnp.int32)
+
+
+_STRATEGIES = {
+    "dense": exchange_dense,
+    "ragged": exchange_ragged,
+    "allgather": exchange_allgather,
+}
+
+
+def exchange(local_sorted, splitter_keys, *, axis_name, p,
+             cfg: ExchangeConfig | None = None, eps: float = 0.05,
+             n_valid=None):
+    cfg = cfg or ExchangeConfig()
+    try:
+        fn = _STRATEGIES[cfg.strategy]
+    except KeyError:
+        raise ValueError(f"unknown exchange strategy {cfg.strategy!r}") from None
+    return fn(local_sorted, splitter_keys, axis_name=axis_name, p=p,
+              cfg=cfg, eps=eps, n_valid=n_valid)

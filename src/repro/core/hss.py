@@ -1,0 +1,128 @@
+"""End-to-end Histogram Sort with Sampling (public API).
+
+    from repro.core import hss
+    result = hss.hss_sort(x)                      # 1-D array, any numeric dtype
+    sorted_shards, counts = result.shards, result.counts
+
+`hss_sort` builds a shard_map over a 1-D mesh axis spanning the given devices;
+`hss_sort_sharded` is the shard_map-resident pipeline for composition into
+larger programs (multistage sorting, MoE dispatch, data pipelines).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import jax.random as jr
+from jax.sharding import PartitionSpec as P
+
+from repro.core.common import HSSConfig, hi_sentinel
+from repro.core.exchange import ExchangeConfig, exchange
+from repro.core.splitters import SplitterStats, hss_splitters
+
+
+class SortResult(NamedTuple):
+    shards: jax.Array          # (p, out_cap) sorted, sentinel-padded
+    counts: jax.Array          # (p,) valid keys per shard
+    splitter_keys: jax.Array   # (p-1,)
+    splitter_ranks: jax.Array  # (p-1,)
+    overflow: jax.Array        # dropped keys (dense exchange only; 0 => exact)
+    stats: SplitterStats
+
+
+def hss_sort_sharded(
+    local: jax.Array,
+    *,
+    axis_name: str,
+    p: int,
+    rng: jax.Array,
+    hss_cfg: HSSConfig | None = None,
+    ex_cfg: ExchangeConfig | None = None,
+    initial_probes: jax.Array | None = None,
+    local_sort_fn=jnp.sort,
+):
+    """Sort a distributed array; call inside shard_map over `axis_name`.
+
+    local: this shard's (n_local,) keys (unsorted). Returns the same tuple as
+    SortResult but with per-shard leading dims stripped (out_cap,), scalar
+    count, replicated splitters/stats.
+    """
+    hss_cfg = hss_cfg or HSSConfig()
+    ex_cfg = ex_cfg or ExchangeConfig()
+    local_sorted = local_sort_fn(local)
+    if p == 1:
+        return (local_sorted, jnp.int32(local.shape[0]),
+                jnp.zeros((0,), local.dtype), jnp.zeros((0,), jnp.int32),
+                jnp.zeros((), jnp.int32), None)
+    keys, ranks, stats = hss_splitters(
+        local_sorted, axis_name=axis_name, p=p, cfg=hss_cfg, rng=rng,
+        initial_probes=initial_probes)
+    out, n_valid, ovf = exchange(
+        local_sorted, keys, axis_name=axis_name, p=p, cfg=ex_cfg,
+        eps=hss_cfg.eps)
+    return out, n_valid, keys, ranks, ovf, stats
+
+
+def _driver(sort_fn, x, mesh, axis_name, seed):
+    devices = mesh.devices.reshape(-1) if mesh is not None else jax.devices()
+    p = len(devices)
+    n = x.shape[0]
+    if p == 1:
+        out = jnp.sort(x)
+        return SortResult(out[None], jnp.full((1,), n, jnp.int32),
+                          jnp.zeros((0,), x.dtype), jnp.zeros((0,), jnp.int32),
+                          jnp.zeros((), jnp.int32), None)
+    if mesh is None:
+        mesh = jax.make_mesh((p,), (axis_name,), devices=devices)
+    if n % p:
+        raise ValueError(f"input length {n} must divide the {p}-way mesh")
+    xs = x.reshape(p, n // p)
+
+    def per_shard(xs_block, key):
+        local = xs_block.reshape(-1)
+        rng = jr.fold_in(key, jax.lax.axis_index(axis_name))
+        out, n_valid, keys, ranks, ovf, stats = sort_fn(local, rng)
+        return (out[None], jnp.asarray(n_valid, jnp.int32)[None],
+                keys, ranks, ovf, stats)
+
+    shmap = jax.shard_map(
+        per_shard, mesh=mesh,
+        in_specs=(P(axis_name), P()),
+        out_specs=(P(axis_name), P(axis_name), P(), P(), P(), P()),
+        check_vma=False)
+    key = jr.key(seed)
+    out, counts, keys, ranks, ovf, stats = jax.jit(shmap)(xs, key)
+    return SortResult(out, counts, keys, ranks, ovf, stats)
+
+
+def hss_sort(
+    x: jax.Array,
+    mesh=None,
+    axis_name: str = "sort",
+    hss_cfg: HSSConfig | None = None,
+    ex_cfg: ExchangeConfig | None = None,
+    seed: int = 0,
+    initial_probes: jax.Array | None = None,
+    local_sort_fn=jnp.sort,
+) -> SortResult:
+    """Sort a 1-D array across all devices of `mesh` (default: all devices)."""
+    hss_cfg = hss_cfg or HSSConfig()
+    ex_cfg = ex_cfg or ExchangeConfig()
+    p = len(mesh.devices.reshape(-1)) if mesh is not None else len(jax.devices())
+
+    def sort_fn(local, rng):
+        return hss_sort_sharded(
+            local, axis_name=axis_name, p=p, rng=rng, hss_cfg=hss_cfg,
+            ex_cfg=ex_cfg, initial_probes=initial_probes,
+            local_sort_fn=local_sort_fn)
+
+    return _driver(sort_fn, x, mesh, axis_name, seed)
+
+
+def gather_sorted(result: SortResult) -> jax.Array:
+    """Concatenate the valid prefixes of all shards (host-side convenience)."""
+    import numpy as np
+    shards = np.asarray(result.shards)
+    counts = np.asarray(result.counts)
+    return np.concatenate([shards[i, :counts[i]] for i in range(shards.shape[0])])

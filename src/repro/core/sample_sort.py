@@ -1,0 +1,87 @@
+"""Sample sort baselines (paper Sections 3.1-3.2).
+
+Two splitter-determination schemes with the three-phase skeleton:
+  * random sampling  (Blelloch et al.; Theorem 3.1 — O(p log N / eps^2) sample)
+  * regular sampling (Shi & Schaeffer PSRS; Theorem 3.2 — O(p^2 / eps) sample)
+
+Both are implemented with the same shard_map-resident conventions as HSS so the
+benchmarks compare only the partitioning strategy (the exchange is shared).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import jax.random as jr
+
+from repro.core.common import hi_sentinel, round_up
+from repro.core.exchange import ExchangeConfig, exchange
+from repro.core.hss import SortResult, _driver
+
+
+def random_sample_splitters(local_sorted, *, axis_name, p, total_sample, rng,
+                            cap=None):
+    """p-1 splitters = evenly spaced keys of a Bernoulli sample of target size."""
+    n_local = local_sorted.shape[0]
+    cap = cap or round_up(max(8, int(3.0 * total_sample / p)), 8)
+    prob = min(1.0, total_sample / float(n_local * p))
+    u = jr.uniform(rng, (n_local,))
+    mask = u < prob
+    n_hit = jnp.sum(mask.astype(jnp.int32))
+    vals = jnp.sort(jnp.where(mask, local_sorted, hi_sentinel(local_sorted.dtype)))[:cap]
+    overflow = jax.lax.psum(jnp.maximum(n_hit - cap, 0), axis_name)
+    probes = jnp.sort(jax.lax.all_gather(vals, axis_name, tiled=True))
+    n_valid = jax.lax.psum(jnp.minimum(n_hit, cap), axis_name)
+    idx = (jnp.arange(1, p, dtype=jnp.int32) * n_valid) // p
+    return jnp.take(probes, idx), overflow
+
+
+def regular_sample_splitters(local_sorted, *, axis_name, p, s):
+    """PSRS: s evenly spaced local keys per shard; splitters evenly spaced in the
+    merged p*s sample. Deterministic (Theorem 3.2: s = p/eps for (1+eps))."""
+    n_local = local_sorted.shape[0]
+    idx = ((jnp.arange(s, dtype=jnp.int32) + 1) * n_local) // (s + 1)
+    vals = local_sorted[idx]
+    probes = jnp.sort(jax.lax.all_gather(vals, axis_name, tiled=True))
+    sidx = (jnp.arange(1, p, dtype=jnp.int32) * (s * p)) // p
+    return probes[sidx]
+
+
+def sample_sort_sharded(local, *, axis_name, p, rng, method="random",
+                        total_sample=None, s=None, eps=0.05,
+                        ex_cfg: ExchangeConfig | None = None):
+    ex_cfg = ex_cfg or ExchangeConfig()
+    local_sorted = jnp.sort(local)
+    n_local = local.shape[0]
+    if method == "random":
+        total_sample = total_sample or max(p, int(2 * p * math.log2(n_local * p) / eps))
+        keys, ovf = random_sample_splitters(
+            local_sorted, axis_name=axis_name, p=p, total_sample=total_sample,
+            rng=rng)
+    elif method == "regular":
+        s = s or max(2, int(p / eps))
+        keys = regular_sample_splitters(local_sorted, axis_name=axis_name, p=p, s=s)
+        ovf = jnp.zeros((), jnp.int32)
+    else:
+        raise ValueError(method)
+    out, n_valid, ex_ovf = exchange(
+        local_sorted, keys, axis_name=axis_name, p=p, cfg=ex_cfg, eps=eps)
+    return out, n_valid, keys, jnp.zeros_like(keys, jnp.int32), ovf + ex_ovf, None
+
+
+def sample_sort(x, mesh=None, axis_name="sort", method="random", seed=0,
+                total_sample=None, s=None, eps=0.05,
+                ex_cfg: ExchangeConfig | None = None) -> SortResult:
+    p = len(mesh.devices.reshape(-1)) if mesh is not None else len(jax.devices())
+
+    def sort_fn(local, rng):
+        out = sample_sort_sharded(
+            local, axis_name=axis_name, p=p, rng=rng, method=method,
+            total_sample=total_sample, s=s, eps=eps, ex_cfg=ex_cfg)
+        o, nv, k, r, ov, _ = out
+        zstats = tuple(jnp.zeros((1,), jnp.int32) for _ in range(4)) + (jnp.int32(1),)
+        from repro.core.splitters import SplitterStats
+        return o, nv, k, r, ov, SplitterStats(*zstats)
+
+    return _driver(sort_fn, x, mesh, axis_name, seed)

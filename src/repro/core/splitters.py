@@ -1,0 +1,230 @@
+"""HSS splitter determination (the paper's core contribution, Section 4).
+
+The algorithm maintains, for every target splitter rank t_i = N*i/p, a
+*splitter interval*: the tightest pair of already-ranked keys bracketing t_i.
+Each round samples keys inside the union of the (still unsatisfied) splitter
+intervals, ranks the sample exactly with one histogram reduction, and tightens
+every interval. Lemmas 4.4/4.5 give geometric shrinkage of the union, so a
+constant per-round sample suffices (Theorem 4.8).
+
+TPU/JAX adaptation (DESIGN.md Section 2):
+  * no central processor: samples are all_gather'ed, histograms psum'ed, and
+    the (tiny) interval state is maintained replicated on every shard;
+  * Bernoulli sampling uses fixed-capacity sentinel-padded sample buffers so
+    all shapes are static; overflow is counted and surfaced;
+  * rank bookkeeping is exact: the "histogram" is the vector of global ranks
+    of the probes (number of keys < probe), obtained by psum-ing local
+    searchsorted results over locally sorted shards.
+
+Everything here runs *inside* shard_map over one mesh axis (`axis_name`).
+Pure helpers (refine, membership, choice) are also reused verbatim by the
+logical-p simulator in repro.core.simulator.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import jax.random as jr
+
+from repro.core.common import (
+    HSSConfig,
+    hi_sentinel,
+    interval_union_size,
+    lo_sentinel,
+    sampling_ratios,
+)
+
+
+class SplitterState(NamedTuple):
+    """Replicated per-splitter interval state; arrays of shape (p-1,).
+
+    lo_rank/hi_rank are *raw* monotone bounds (never collapsed), so
+    searchsorted-based membership tests stay valid. `satisfied` marks splitters
+    whose target range T_i already contains a ranked key.
+    """
+
+    lo_rank: jax.Array  # int32, largest known rank <= t_i
+    hi_rank: jax.Array  # int32, smallest known rank >= t_i
+    lo_key: jax.Array   # key at lo_rank (lo sentinel when rank 0 / unknown)
+    hi_key: jax.Array   # key at hi_rank (hi sentinel when rank N / unknown)
+    satisfied: jax.Array  # bool
+
+
+class SplitterStats(NamedTuple):
+    """Per-round diagnostics, arrays of shape (k,)."""
+
+    gamma_size: jax.Array      # |gamma_{j-1}|: union of active intervals before round j
+    sample_count: jax.Array    # total keys sampled in round j (all shards)
+    overflow: jax.Array        # samples dropped due to buffer capacity
+    n_satisfied: jax.Array     # satisfied splitters after round j
+    rounds_used: jax.Array     # scalar: first round after which all satisfied (1-based)
+
+
+def splitter_targets(n: int, p: int) -> jax.Array:
+    """Target ranks t_i = N*i/p for i = 1..p-1."""
+    import numpy as np
+    return jnp.asarray(np.arange(1, p, dtype=np.int64) * n // p, jnp.int32)
+
+
+def init_state(p: int, n: int, dtype) -> SplitterState:
+    m = p - 1
+    return SplitterState(
+        lo_rank=jnp.zeros((m,), jnp.int32),
+        hi_rank=jnp.full((m,), n, jnp.int32),
+        lo_key=jnp.full((m,), lo_sentinel(dtype), dtype),
+        hi_key=jnp.full((m,), hi_sentinel(dtype), dtype),
+        satisfied=jnp.zeros((m,), bool),
+    )
+
+
+def refine(state: SplitterState, probes: jax.Array, probe_ranks: jax.Array,
+           targets: jax.Array, tol) -> SplitterState:
+    """Tighten every splitter interval with freshly ranked probes.
+
+    probes must be sorted ascending (sentinel-padded tail) and probe_ranks
+    nondecreasing (sentinels rank N). Fully vectorized over the p-1 splitters.
+    """
+    j = jnp.searchsorted(probe_ranks, targets, side="left")  # first rank >= t
+    j = jnp.minimum(j, probe_ranks.shape[0] - 1)
+    cand_hi_rank = probe_ranks[j]
+    cand_hi_key = probes[j]
+    jm = jnp.maximum(j - 1, 0)
+    has_lo = j > 0
+    cand_lo_rank = jnp.where(has_lo, probe_ranks[jm], 0)
+    cand_lo_key = jnp.where(has_lo, probes[jm], state.lo_key)
+
+    take_lo = cand_lo_rank > state.lo_rank
+    take_hi = cand_hi_rank < state.hi_rank
+    lo_rank = jnp.where(take_lo, cand_lo_rank, state.lo_rank)
+    lo_key = jnp.where(take_lo, cand_lo_key, state.lo_key)
+    hi_rank = jnp.where(take_hi, cand_hi_rank, state.hi_rank)
+    hi_key = jnp.where(take_hi, cand_hi_key, state.hi_key)
+    satisfied = ((targets - lo_rank) <= tol) | ((hi_rank - targets) <= tol)
+    return SplitterState(lo_rank, hi_rank, lo_key, hi_key, satisfied)
+
+
+def active_union_size(state: SplitterState, targets: jax.Array) -> jax.Array:
+    """|gamma|: union (rank space) of intervals of *unsatisfied* splitters.
+
+    Satisfied splitters contribute empty [t_i, t_i] intervals. Because the raw
+    bounds are monotone and intervals are disjoint-or-identical (paper
+    Section 4.2.2), the substitution only ever undercounts overlap slivers,
+    which is conservative (drives the sampling probability up slightly).
+    """
+    lo = jnp.where(state.satisfied, targets, state.lo_rank)
+    hi = jnp.where(state.satisfied, targets, state.hi_rank)
+    return interval_union_size(lo, hi)
+
+
+def gamma_membership(x: jax.Array, state: SplitterState) -> jax.Array:
+    """Boolean mask: which keys of sorted-or-not x lie in an active interval.
+
+    A key x is in gamma iff some unsatisfied splitter i has
+    lo_key_i < x < hi_key_i. The containing intervals form a contiguous run
+    [a, b) over i (intervals are disjoint-or-identical and bounds monotone), so
+    membership reduces to two searchsorteds plus a prefix-sum lookup.
+    """
+    unsat = (~state.satisfied).astype(jnp.int32)
+    csum = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(unsat)])
+    a = jnp.searchsorted(state.hi_key, x, side="right")   # first i with hi > x
+    b = jnp.searchsorted(state.lo_key, x, side="left")    # first i with lo >= x
+    b = jnp.maximum(a, b)
+    return (csum[b] - csum[a]) > 0
+
+
+def choose_splitters(state: SplitterState, targets: jax.Array):
+    """Final splitter keys: the closer satisfied side of each interval."""
+    d_lo = targets - state.lo_rank
+    d_hi = state.hi_rank - targets
+    pick_lo = d_lo <= d_hi
+    keys = jnp.where(pick_lo, state.lo_key, state.hi_key)
+    ranks = jnp.where(pick_lo, state.lo_rank, state.hi_rank)
+    return keys, ranks
+
+
+def _sample_round(local_sorted, state, prob, cap, rng):
+    """Bernoulli-sample active-interval keys into a fixed sentinel-padded buffer."""
+    n_local = local_sorted.shape[0]
+    in_g = gamma_membership(local_sorted, state)
+    u = jr.uniform(rng, (n_local,))
+    mask = in_g & (u < prob)
+    n_hit = jnp.sum(mask.astype(jnp.int32))
+    vals = jnp.where(mask, local_sorted, hi_sentinel(local_sorted.dtype))
+    vals = jnp.sort(vals)[:cap]
+    overflow = jnp.maximum(n_hit - cap, 0)
+    return vals, n_hit - overflow, overflow
+
+
+def hss_splitters(
+    local_sorted: jax.Array,
+    *,
+    axis_name: str,
+    p: int,
+    cfg: HSSConfig,
+    rng: jax.Array,
+    initial_probes: jax.Array | None = None,
+):
+    """Determine the p-1 splitters of a distributed sort. shard_map-resident.
+
+    Args:
+      local_sorted: this shard's keys, sorted ascending, shape (n_local,).
+      axis_name: mesh axis over which the p shards live.
+      p: number of shards on that axis (static).
+      cfg: HSSConfig.
+      rng: per-shard PRNG key (callers fold in jax.lax.axis_index(axis_name)).
+      initial_probes: optional sorted probe keys to warm-start round 1 with
+        (e.g. the previous iteration's splitters — the ChaNGa trick, paper
+        Section 7.3). Sentinel-padded, any static length.
+
+    Returns:
+      (splitter_keys (p-1,), splitter_ranks (p-1,), SplitterStats) — replicated.
+    """
+    n_local = local_sorted.shape[0]
+    n = n_local * p
+    dtype = local_sorted.dtype
+    k = cfg.resolved_rounds(p)
+    cap = cfg.resolved_sample_cap(p)
+    tol = jnp.int32(max(1, int(n * cfg.eps / (2 * p))))
+    targets = splitter_targets(n, p)
+    f_total = float(cap * p) / 2.0  # target expected overall sample per round
+    ratios = jnp.asarray(sampling_ratios(p, cfg.eps, k), jnp.float32)
+
+    state0 = init_state(p, n, dtype)
+    if initial_probes is not None:
+        # Free warm-start: rank the provided probes once and refine.
+        lr = jnp.searchsorted(local_sorted, initial_probes, side="left")
+        pr = jax.lax.psum(lr.astype(jnp.int32), axis_name)
+        state0 = refine(state0, initial_probes, pr, targets, tol)
+
+    def round_body(carry, j):
+        state, key = carry
+        key, sub = jr.split(key)
+        gamma = active_union_size(state, targets)
+        if cfg.adaptive:
+            prob = jnp.minimum(1.0, f_total / jnp.maximum(gamma, 1).astype(jnp.float32))
+        else:
+            prob = jnp.minimum(1.0, ratios[j] / float(n_local))
+        vals, n_samp, ovf = _sample_round(local_sorted, state, prob, cap, sub)
+        probes = jnp.sort(jax.lax.all_gather(vals, axis_name, tiled=True))
+        local_ranks = jnp.searchsorted(local_sorted, probes, side="left")
+        ranks = jax.lax.psum(local_ranks.astype(jnp.int32), axis_name)
+        state = refine(state, probes, ranks, targets, tol)
+        stats = (
+            gamma,
+            jax.lax.psum(n_samp, axis_name),
+            jax.lax.psum(ovf, axis_name),
+            jnp.sum(state.satisfied.astype(jnp.int32)),
+        )
+        return (state, key), stats
+
+    (state, _), (gam, cnt, ovf, nsat) = jax.lax.scan(
+        round_body, (state0, rng), jnp.arange(k))
+    keys, ranks = choose_splitters(state, targets)
+    all_sat = nsat >= (p - 1)
+    rounds_used = jnp.where(
+        jnp.any(all_sat), 1 + jnp.argmax(all_sat), jnp.int32(k))
+    stats = SplitterStats(gam, cnt, ovf, nsat, rounds_used)
+    return keys, ranks, stats

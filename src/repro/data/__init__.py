@@ -1,0 +1,10 @@
+"""repro.data — input pipelines.
+
+distributions: the paper's Figure 5 key distributions (sort workloads).
+synthetic:     deterministic synthetic token streams for LM training.
+partition:     HSS-based global length bucketing for packed batching.
+"""
+from repro.data.distributions import DISTRIBUTIONS, make_distribution
+from repro.data.synthetic import SyntheticTokens
+
+__all__ = ["DISTRIBUTIONS", "make_distribution", "SyntheticTokens"]

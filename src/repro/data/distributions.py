@@ -1,0 +1,62 @@
+"""The paper's input distributions (Section 7.2, Figure 5).
+
+  UNIF      uniform over the full int range used
+  SKEW1     half uniform over the range, half uniform over a window of 1000
+  SKEW2     uniform over [0, 100] (massive duplication)
+  SKEW3     bitwise AND of two uniform keys (skew toward zero bits)
+  GAUSS     Gaussian
+  AllZeros  all keys identical
+
+All return int32 numpy arrays (nonnegative, < 2**30 so tagging headroom
+exists). Duplicates are intentional for SKEW2/AllZeros — run through
+repro.core.tagging before sorting, exactly as the paper prescribes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_RANGE = 2 ** 30
+
+
+def _unif(rng, n):
+    return rng.integers(0, _RANGE, size=n)
+
+
+def _skew1(rng, n):
+    a = rng.integers(0, _RANGE, size=n // 2)
+    b = rng.integers(_RANGE // 3, _RANGE // 3 + 1000, size=n - n // 2)
+    out = np.concatenate([a, b])
+    rng.shuffle(out)
+    return out
+
+
+def _skew2(rng, n):
+    return rng.integers(0, 101, size=n)
+
+
+def _skew3(rng, n):
+    return rng.integers(0, _RANGE, size=n) & rng.integers(0, _RANGE, size=n)
+
+
+def _gauss(rng, n):
+    x = rng.standard_normal(n) * (_RANGE / 8) + _RANGE / 2
+    return np.clip(x, 0, _RANGE - 1).astype(np.int64)
+
+
+def _allzeros(rng, n):
+    return np.zeros(n, np.int64)
+
+
+DISTRIBUTIONS = {
+    "UNIF": _unif,
+    "SKEW1": _skew1,
+    "SKEW2": _skew2,
+    "SKEW3": _skew3,
+    "GAUSS": _gauss,
+    "AllZeros": _allzeros,
+}
+
+
+def make_distribution(name: str, n: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return DISTRIBUTIONS[name](rng, n).astype(np.int32)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the sort hot spots (DESIGN.md Section 2.4).
+
+bitonic_sort  VMEM-tiled bitonic sorting/merging networks — the local-sort
+              phase the paper delegates to std::sort, rebuilt as
+              data-independent compare-exchange networks that map onto the
+              TPU VPU (no divergence, fully vectorized).
+histogram     probe-count kernel — the per-round histogram: counts of local
+              keys below each probe via tiled comparison reduction (an MXU/VPU
+              arithmetic-intensity trade vs. scalar binary searches).
+"""

@@ -1,0 +1,3 @@
+from repro.kernels.bitonic_sort.ops import block_sort, local_sort, merge_pass
+
+__all__ = ["block_sort", "local_sort", "merge_pass"]

@@ -1,0 +1,64 @@
+"""jit'd wrappers around the bitonic kernels.
+
+`local_sort(x)` is the drop-in local-sort for the HSS pipeline
+(hss_sort(..., local_sort_fn=local_sort)): pad to a power of two with the hi
+sentinel, kernel-sort VMEM blocks, then log(n/B) pairwise merge passes.
+interpret=True on CPU (kernel body executes in Python), compiled Mosaic on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.common import hi_sentinel
+from repro.kernels.bitonic_sort import kernel as K
+
+# VMEM budget: a merge block of 2*MAX_RUN f32 keys (plus double buffering)
+# must fit VMEM; 64K keys = 256 KiB. Beyond that, merge passes fall back to
+# a jnp merge (still O(n log n) total work, just not kernel-resident).
+DEFAULT_BLOCK = 1024
+MAX_RUN = 65536
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pow2_ceil(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def block_sort(x, block: int = DEFAULT_BLOCK, interpret: bool | None = None):
+    """Sort independent `block`-sized runs (power-of-two length required)."""
+    interpret = _interpret() if interpret is None else interpret
+    return K.sort_blocks(x, block, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("run", "interpret"))
+def merge_pass(x, run: int, interpret: bool | None = None):
+    interpret = _interpret() if interpret is None else interpret
+    return K.merge_adjacent(x, run, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def local_sort(x, block: int = DEFAULT_BLOCK, interpret: bool | None = None):
+    """Full local sort: kernel block sort + kernel merge cascade."""
+    interpret = _interpret() if interpret is None else interpret
+    n = x.shape[0]
+    np2 = _pow2_ceil(max(n, 2))
+    blk = min(block, np2)
+    pad = np2 - n
+    xp = jnp.concatenate([x, jnp.full((pad,), hi_sentinel(x.dtype), x.dtype)])
+    xp = K.sort_blocks(xp, blk, interpret=interpret)
+    run = blk
+    while run < np2:
+        if 2 * run <= MAX_RUN:
+            xp = K.merge_adjacent(xp, run, interpret=interpret)
+        else:  # VMEM ceiling: finish with one XLA sort of the padded array
+            xp = jnp.sort(xp)
+            break
+        run *= 2
+    return xp[:n]

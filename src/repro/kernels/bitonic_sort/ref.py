@@ -1,0 +1,14 @@
+"""Pure-jnp oracles for the bitonic kernels."""
+import jax.numpy as jnp
+
+
+def block_sort_ref(x, block):
+    return jnp.sort(x.reshape(-1, block), axis=1).reshape(-1)
+
+
+def merge_pass_ref(x, run):
+    return jnp.sort(x.reshape(-1, 2 * run), axis=1).reshape(-1)
+
+
+def local_sort_ref(x):
+    return jnp.sort(x)

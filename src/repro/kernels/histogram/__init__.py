@@ -1,0 +1,3 @@
+from repro.kernels.histogram.ops import probe_ranks, probe_counts
+
+__all__ = ["probe_ranks", "probe_counts"]

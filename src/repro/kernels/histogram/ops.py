@@ -1,0 +1,38 @@
+"""jit'd wrappers for the probe-rank histogram kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.common import hi_sentinel, round_up
+from repro.kernels.histogram.kernel import probe_ranks_pallas
+
+DEFAULT_TILE = 512
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def probe_ranks(keys, probes, tile: int = DEFAULT_TILE,
+                interpret: bool | None = None):
+    """rank[m] = #{keys < probes[m]}; keys need not be sorted."""
+    interpret = _interpret() if interpret is None else interpret
+    n = keys.shape[0]
+    t = min(tile, n)
+    npad = round_up(n, t)
+    if npad != n:
+        keys = jnp.concatenate(
+            [keys, jnp.full((npad - n,), hi_sentinel(keys.dtype), keys.dtype)])
+    return probe_ranks_pallas(keys, probes, tile=t, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def probe_counts(keys, probes, tile: int = DEFAULT_TILE,
+                 interpret: bool | None = None):
+    r = probe_ranks(keys, probes, tile=tile, interpret=interpret)
+    n = jnp.int32(keys.shape[0])
+    return jnp.diff(jnp.concatenate([jnp.zeros((1,), jnp.int32), r, n[None]]))

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the probe-rank kernel."""
+import jax.numpy as jnp
+
+
+def probe_ranks_ref(keys, probes):
+    """rank[m] = #{keys < probes[m]} (keys in any order)."""
+    return jnp.searchsorted(jnp.sort(keys), probes, side="left").astype(jnp.int32)
+
+
+def probe_counts_ref(keys, probes):
+    """Keys per probe interval: counts[i] = #{probe[i-1] <= k < probe[i]}."""
+    r = probe_ranks_ref(keys, probes)
+    n = jnp.int32(keys.shape[0])
+    return jnp.diff(jnp.concatenate([jnp.zeros((1,), jnp.int32), r, n[None]]))

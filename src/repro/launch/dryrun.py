@@ -1,0 +1,310 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell against
+the production mesh and record memory/cost/collective analyses.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh both --out experiments/dryrun.json
+
+Each cell jits the real step function (train_step / prefill_step /
+serve_step) against ShapeDtypeStruct inputs with production shardings —
+compile success proves the distribution config is coherent; the emitted JSON
+feeds EXPERIMENTS.md Sections Dry-run and Roofline.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, long_ctx_eligible
+from repro.configs.shapes import Shape
+from repro.launch.mesh import make_ctx, make_production_mesh
+from repro.launch.specs import (batch_specs, decode_specs, param_shardings,
+                                tree_named)
+from repro.models.params import param_pspecs
+from repro.models.flops import active_params, model_flops, total_params
+from repro.models.params import abstract_params
+from repro.models.steps import (make_prefill_step, make_serve_step,
+                                make_train_step)
+from repro.optim import make_optimizer
+from repro.optim.schedule import cosine_schedule
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+          "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+          "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+# per-device bytes-moved multiplier per collective kind (ring algorithms).
+# Optimized HLO prints operands as bare names, so bytes derive from the
+# OUTPUT shape (all of these are shape-preserving except reduce-scatter,
+# whose input volume = output x group size — parsed from replica_groups):
+#   all-gather          receives ~the full output          -> out x 1
+#   all-reduce          reduce-scatter + all-gather        -> out x 2
+#   reduce-scatter      sends ~its input                   -> out x group
+#   all-to-all          sends/receives ~the buffer         -> out x 1
+#   collective-permute  one send + one receive             -> out x 1
+_MULT = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": None,
+         "all-to-all": 1.0, "collective-permute": 1.0,
+         "ragged-all-to-all": 1.0}
+_LINE_RE = re.compile(
+    r"=\s*(?P<out>\([^)]*\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s+"
+    r"(?P<kind>" + "|".join(_COLLECTIVES) + r")(?P<variant>-start|-done)?\(")
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(tok: str, dims: str) -> int:
+    b = _BYTES.get(tok, 4)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum per-device bytes moved by collectives, from the partitioned HLO.
+
+    NB: bodies of while loops (lax.scan) appear once in the HLO; callers that
+    need whole-step totals use the calibrated unrolled modules (see
+    calibrated_costs) rather than this raw count on a scanned module.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m or m.group("variant") == "-done":
+            continue
+        kind = m.group("kind")
+        shapes = _SHAPE_RE.findall(m.group("out"))
+        if m.group("variant") == "-start" and len(shapes) > 1:
+            # start outputs (operand, result): the result is the payload
+            shapes = [max(shapes, key=lambda s: _shape_bytes(*s))]
+        mult = _MULT[kind]
+        if mult is None:  # reduce-scatter: input volume = out x group size
+            g = _GROUP_RE.search(line)
+            mult = float(g.group(2)) if g else 16.0
+        out[kind] += int(sum(_shape_bytes(t, d) for t, d in shapes) * mult)
+        counts[kind] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": int(sum(out.values()))}
+
+
+def build_step(cfg, shape: Shape, ctx):
+    """Returns (jitted fn, example abstract args) for the cell."""
+    psh = param_shardings(cfg, ctx)
+    params = abstract_params(cfg)
+    if shape.kind == "train":
+        opt = make_optimizer(cfg.optimizer)
+        opt_state = jax.eval_shape(opt.init, params)
+        opt_sh = tree_named(ctx, opt.state_pspecs(param_pspecs(cfg, ctx)))
+        bs, bsh = batch_specs(cfg, shape, ctx)
+        fn = make_train_step(cfg, ctx, opt,
+                             cosine_schedule(3e-4, 2000, 100_000))
+        jfn = jax.jit(fn, in_shardings=(psh, opt_sh, bsh),
+                      donate_argnums=(0, 1))
+        return jfn, (params, opt_state, bs)
+    # logits + new-cache output shardings: without them, GSPMD may leave a
+    # cache-update scatter replicated (2x a 500k-context KV in temp buffers)
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.specs import _dp_or_none, _ns, cache_pspecs
+    from repro.launch.specs import tree_named as _tn
+    dp = _dp_or_none(ctx, shape.global_batch)
+    logits_sh = _ns(ctx, P(dp, ctx.tp_axis))
+    if shape.kind == "prefill":
+        bs, bsh = batch_specs(cfg, shape, ctx)
+        csh = _tn(ctx, cache_pspecs(cfg, ctx, shape.global_batch))
+        fn = make_prefill_step(cfg, ctx, shape.seq_len)
+        jfn = jax.jit(fn, in_shardings=(psh, bsh),
+                      out_shardings=(logits_sh, csh))
+        return jfn, (params, bs)
+    if shape.kind == "decode":
+        (cache, tokens, pos), (csh, tsh, possh) = decode_specs(cfg, shape, ctx)
+        fn = make_serve_step(cfg, ctx)
+        jfn = jax.jit(fn, in_shardings=(psh, csh, tsh, possh),
+                      out_shardings=(logits_sh, csh),
+                      donate_argnums=(1,))
+        return jfn, (params, cache, tokens, pos)
+    raise ValueError(shape.kind)
+
+
+def _calib_variants(cfg):
+    """Small fully-unrolled config variants for exact per-layer cost deltas.
+
+    lax.scan bodies are counted once by HLO cost analysis, so whole-step
+    totals are reconstructed as A + (L-1)*(B-A) from unrolled 1-/2-layer
+    modules (plus a third variant isolating the hybrid shared block)."""
+    import dataclasses as dc
+    if cfg.family == "hybrid":
+        return [dc.replace(cfg, n_layers=1, shared_attn_period=1, scan_unroll=True),
+                dc.replace(cfg, n_layers=2, shared_attn_period=2, scan_unroll=True),
+                dc.replace(cfg, n_layers=2, shared_attn_period=1, scan_unroll=True)]
+    if cfg.family == "encdec":
+        return [dc.replace(cfg, n_enc_layers=1, n_dec_layers=1, n_layers=2,
+                           scan_unroll=True),
+                dc.replace(cfg, n_enc_layers=2, n_dec_layers=2, n_layers=4,
+                           scan_unroll=True)]
+    return [dc.replace(cfg, n_layers=1, scan_unroll=True),
+            dc.replace(cfg, n_layers=2, scan_unroll=True)]
+
+
+def _measure(cfg, shape, ctx) -> dict:
+    jfn, args = build_step(cfg, shape, ctx)
+    compiled = jfn.lower(*args).compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    col = collective_bytes(compiled.as_text())
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": {k: float(v) for k, v in col["bytes"].items()},
+            "coll_total": float(col["total_bytes"])}
+
+
+def _lincomb(base, deltas):
+    """base + sum(w_i * d_i) elementwise over the metric dicts."""
+    out = {}
+    for key in ("flops", "bytes", "coll_total"):
+        out[key] = max(0.0, base[key] + sum(
+            w * (d[key]) for w, d in deltas))
+    out["coll"] = {k: max(0.0, base["coll"][k] + sum(
+        w * d["coll"][k] for w, d in deltas)) for k in base["coll"]}
+    return out
+
+
+def _sub(a, b):
+    return {"flops": a["flops"] - b["flops"], "bytes": a["bytes"] - b["bytes"],
+            "coll_total": a["coll_total"] - b["coll_total"],
+            "coll": {k: a["coll"][k] - b["coll"][k] for k in a["coll"]}}
+
+
+def calibrated_costs(cfg, shape, ctx) -> dict:
+    vs = _calib_variants(cfg)
+    ms = [_measure(v, shape, ctx) for v in vs]
+    if cfg.family == "hybrid":
+        from repro.models.lm import _hybrid_segments
+        n_seg = len(_hybrid_segments(cfg))
+        mamba_per = _sub(ms[1], ms[0])
+        shared_per = _sub(ms[2], ms[1])
+        return _lincomb(ms[0], [(cfg.n_layers - 1, mamba_per),
+                                (n_seg - 1, shared_per)])
+    if cfg.family == "encdec":
+        per = _sub(ms[1], ms[0])
+        return _lincomb(ms[0], [(cfg.n_enc_layers - 1, per)])
+    per = _sub(ms[1], ms[0])
+    return _lincomb(ms[0], [(cfg.n_layers - 1, per)])
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if shape_name == "long_500k" and not long_ctx_eligible(cfg):
+        rec["status"] = "SKIP(full-attention)"
+        return rec
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = make_ctx(cfg, mesh, multi_pod=multi_pod)
+    jfn, args = build_step(cfg, shape, ctx)
+    lowered = jfn.lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    txt = compiled.as_text()
+    col = collective_bytes(txt)
+    calib = calibrated_costs(cfg, shape, ctx)
+    t3 = time.time()
+    n_chips = 512 if multi_pod else 256
+    rec.update({
+        "status": "OK",
+        "lower_s": round(t1 - t0, 1),
+        "compile_s": round(t2 - t1, 1),
+        "memory": {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_live_bytes": int(ma.argument_size_in_bytes
+                                   + ma.output_size_in_bytes
+                                   + ma.temp_size_in_bytes
+                                   - ma.alias_size_in_bytes),
+        },
+        "cost_scanned_once": {
+            "flops_per_device": float(ca.get("flops", 0.0)),
+            "bytes_per_device": float(ca.get("bytes accessed", 0.0))},
+        "collectives_scanned_once": col,
+        "calibrated": calib,   # whole-step per-device totals (see _calib_variants)
+        "calib_s": round(t3 - t2, 1),
+        "model": {
+            "params_total": total_params(cfg),
+            "params_active": active_params(cfg),
+            "model_flops_global": model_flops(
+                cfg, shape.kind, shape.seq_len, shape.global_batch),
+            "n_chips": n_chips,
+        },
+    })
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="single arch id (default all)")
+    ap.add_argument("--shape", default=None, help="single shape (default all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    if args.skip_existing and os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+            if r.get("status", "").startswith(("OK", "SKIP"))}
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    for multi in meshes:
+        for arch in archs:
+            for shape in shapes:
+                key = (arch, shape, "2x16x16" if multi else "16x16")
+                if key in done:
+                    continue
+                print(f"[dryrun] {key} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape, multi)
+                except Exception as e:  # record the failure, keep going
+                    rec = {"arch": arch, "shape": shape, "mesh": key[2],
+                           "status": f"FAIL({type(e).__name__})",
+                           "error": str(e)[:2000],
+                           "trace": traceback.format_exc()[-2000:]}
+                results = [r for r in results
+                           if (r["arch"], r["shape"], r["mesh"]) != key]
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                print(f"[dryrun] {key} -> {rec['status']}", flush=True)
+
+    ok = sum(r["status"] == "OK" for r in results)
+    skip = sum(r["status"].startswith("SKIP") for r in results)
+    fail = sum(r["status"].startswith("FAIL") for r in results)
+    print(f"[dryrun] done: {ok} OK, {skip} SKIP, {fail} FAIL")
+    return 0 if fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,132 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ must precede all other imports (jax locks device count on first init)
+
+"""Perf hillclimbing harness (EXPERIMENTS.md Section Perf).
+
+Each experiment = (cell, config/ctx override) -> re-lower -> calibrated
+roofline terms; results append to experiments/hillclimb.json so the
+hypothesis -> change -> before/after log is machine-checkable.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --exp kimi_f8_gather
+"""
+import argparse
+import dataclasses
+import json
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.launch.dryrun import build_step, calibrated_costs, collective_bytes
+from repro.launch.mesh import make_ctx, make_production_mesh
+from repro.models.flops import model_flops
+
+PEAK, HBM, ICI = 197e12, 819e9, 50e9
+
+
+def measure(arch, shape_name, cfg_changes=None, ctx_changes=None):
+    cfg = get_config(arch)
+    if cfg_changes:
+        cfg = dataclasses.replace(cfg, **cfg_changes)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=False)
+    ctx = make_ctx(cfg, mesh, multi_pod=False)
+    if ctx_changes:
+        ctx = dataclasses.replace(ctx, **ctx_changes)
+    jfn, args = build_step(cfg, shape, ctx)
+    compiled = jfn.lower(*args).compile()
+    ma = compiled.memory_analysis()
+    cal = calibrated_costs(cfg, shape, ctx)
+    useful = model_flops(cfg, shape.kind, shape.seq_len, shape.global_batch) / 256
+    kindmult = 3.0 if shape.kind == "train" else 1.0
+    mem_lo = (kindmult * ma.argument_size_in_bytes
+              + ma.output_size_in_bytes) / HBM
+    terms = {"compute_s": cal["flops"] / PEAK,
+             "collective_s": cal["coll_total"] / ICI,
+             "memory_s_lower": mem_lo}
+    dom = max(terms, key=terms.get)
+    return {
+        "arch": arch, "shape": shape_name,
+        "cfg_changes": {k: str(v) for k, v in (cfg_changes or {}).items()},
+        "ctx_changes": {k: str(v) for k, v in (ctx_changes or {}).items()},
+        "peak_gb": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                    + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 1e9,
+        "flops_per_dev_tf": cal["flops"] / 1e12,
+        "coll_gb": cal["coll_total"] / 1e9,
+        "coll_mix_gb": {k: round(v / 1e9, 2) for k, v in cal["coll"].items()
+                        if v > 1e8},
+        "hbm_gb": cal["bytes"] / 1e9,
+        "memory_s_upper": round(cal["bytes"] / HBM, 4),
+        **{k: round(v, 4) for k, v in terms.items()},
+        "dominant": dom,
+        "useful_s": round(useful / PEAK, 4),
+        "roofline_frac": round((useful / PEAK) / max(terms.values()), 4),
+    }
+
+
+EXPERIMENTS = {
+    # --- kimi-k2 train_4k (worst peak + most collective-bound) ---
+    "kimi_base": ("kimi-k2-1t-a32b", "train_4k", None, None),
+    "kimi_f8_gather": ("kimi-k2-1t-a32b", "train_4k",
+                       {"moe_gather_dtype": "float8_e4m3fn"}, None),
+    "kimi_no_seqpar": ("kimi-k2-1t-a32b", "train_4k", None,
+                       {"seq_parallel": False}),
+    "kimi_f8_noseqpar": ("kimi-k2-1t-a32b", "train_4k",
+                         {"moe_gather_dtype": "float8_e4m3fn"},
+                         {"seq_parallel": False}),
+    "kimi_megatron_sp": ("kimi-k2-1t-a32b", "train_4k", None,
+                         {"tp_seq_collectives": True}),
+    "kimi_ctxpar": ("kimi-k2-1t-a32b", "train_4k",
+                    {"moe_gather_dtype": "float8_e4m3fn"},
+                    {"shard_heads": False, "rules_extra": (("tp", None),)}),
+    "kimi_ctxpar_a2a8": ("kimi-k2-1t-a32b", "train_4k",
+                         {"moe_gather_dtype": "float8_e4m3fn",
+                          "moe_a2a_dtype": "float8_e4m3fn"},
+                         {"shard_heads": False, "rules_extra": (("tp", None),)}),
+    "kimi_f8_msp": ("kimi-k2-1t-a32b", "train_4k",
+                    {"moe_gather_dtype": "float8_e4m3fn"},
+                    {"tp_seq_collectives": True}),
+    "kimi_cf1": ("kimi-k2-1t-a32b", "train_4k",
+                 {"moe_capacity_factor": 1.0,
+                  "moe_gather_dtype": "float8_e4m3fn"}, None),
+    "kimi_decode": ("kimi-k2-1t-a32b", "decode_32k", None, None),
+    # --- granite-34b train_4k (most collective-bound dense) ---
+    "granite_base": ("granite-34b", "train_4k", None, None),
+    "granite_no_seqpar": ("granite-34b", "train_4k", None,
+                          {"seq_parallel": False}),
+    "granite_megatron_sp": ("granite-34b", "train_4k", None,
+                            {"tp_seq_collectives": True}),
+    "granite_pure_fsdp": ("granite-34b", "train_4k", None,
+                          {"dp_axes": ("data", "model"), "tp_axis": None,
+                           "seq_parallel": False}),
+    "granite_chunk2k": ("granite-34b", "train_4k", {"attn_chunk": 2048}, None),
+    "stablelm_pure_fsdp": ("stablelm-12b", "train_4k", None,
+                           {"dp_axes": ("data", "model"), "tp_axis": None,
+                            "seq_parallel": False}),
+    # --- zamba2 long_500k (worst roofline fraction) ---
+    "zamba_long_base": ("zamba2-1.2b", "long_500k", None, None),
+    "zamba_long_window2k": ("zamba2-1.2b", "long_500k",
+                            {"attn_window": 2048}, None),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exp", required=True)
+    ap.add_argument("--out", default="experiments/hillclimb.json")
+    args = ap.parse_args()
+    arch, shape, cfgc, ctxc = EXPERIMENTS[args.exp]
+    rec = measure(arch, shape, cfgc, ctxc)
+    rec["exp"] = args.exp
+    hist = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            hist = json.load(f)
+    hist = [h for h in hist if h.get("exp") != args.exp] + [rec]
+    with open(args.out, "w") as f:
+        json.dump(hist, f, indent=1)
+    print(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""input_specs: ShapeDtypeStruct stand-ins + shardings for every
+(arch x shape) cell — shardable, weak-type-correct, zero allocation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import Shape
+from repro.models.config import ArchConfig
+from repro.models.lm import init_cache
+from repro.models.params import abstract_params, param_pspecs
+from repro.parallel.ctx import ParallelCtx
+
+
+def _ns(ctx, spec):
+    return NamedSharding(ctx.mesh, spec)
+
+
+def _dp_or_none(ctx, n: int):
+    """Shard a batch dim over dp only when divisible (long_500k has B=1)."""
+    return tuple(ctx.dp_axes) if n % max(ctx.dp_size, 1) == 0 and \
+        n >= ctx.dp_size else None
+
+
+def batch_specs(cfg: ArchConfig, shape: Shape, ctx: ParallelCtx):
+    """Abstract batch + shardings for a train/prefill step."""
+    b, s = shape.global_batch, shape.seq_len
+    dp = _dp_or_none(ctx, b)
+    dt = jnp.dtype(cfg.dtype)
+    specs, shards = {}, {}
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.embed_inputs:
+        specs["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)
+        shards["embeds"] = _ns(ctx, P(dp, None, None))
+    else:
+        specs["tokens"] = tok
+        shards["tokens"] = _ns(ctx, P(dp, None))
+    if cfg.family == "encdec":
+        specs["tokens"] = tok
+        shards["tokens"] = _ns(ctx, P(dp, None))
+        specs["enc"] = jax.ShapeDtypeStruct((b, cfg.enc_ctx, cfg.d_model), dt)
+        shards["enc"] = _ns(ctx, P(dp, None, None))
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        shards["labels"] = _ns(ctx, P(dp, None))
+    return specs, shards
+
+
+def cache_pspecs(cfg: ArchConfig, ctx: ParallelCtx, batch: int):
+    """Sharding pytree matching init_cache: KV caches shard their *head* dim
+    over TP when kv_heads divides it (update + attention fully local);
+    otherwise the context dim (flash-decode combine). Batch over dp when
+    divisible; SSM inner dims over TP."""
+    dp = _dp_or_none(ctx, batch)
+    tp = ctx.tp_axis
+    tp_n = ctx.tp_size
+    if cfg.n_kv_heads and tp_n > 1 and cfg.n_kv_heads % tp_n == 0:
+        kv_spec = (P(None, dp, None, tp, None), P(None, dp, None, tp, None))
+    else:
+        kv_spec = (P(None, dp, tp, None, None), P(None, dp, tp, None, None))
+    if cfg.family in ("dense", "vlm", "moe"):
+        return {"kv": kv_spec}
+    if cfg.family == "ssm":
+        return {"conv_x": P(None, dp, None, tp),
+                "conv_B": P(None, dp, None, None),
+                "conv_C": P(None, dp, None, None),
+                "state": P(None, dp, tp, None, None)}
+    if cfg.family == "hybrid":
+        return {
+            "mamba": {"conv_x": P(None, dp, None, tp),
+                      "conv_B": P(None, dp, None, None),
+                      "conv_C": P(None, dp, None, None),
+                      "state": P(None, dp, tp, None, None)},
+            "shared_kv": kv_spec,
+        }
+    if cfg.family == "encdec":
+        return {"dec": {"kv": kv_spec},
+                "enc_out": P(dp, None, None)}
+    raise ValueError(cfg.family)
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_seq: int, ctx):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_seq, ctx))
+
+
+def decode_specs(cfg: ArchConfig, shape: Shape, ctx: ParallelCtx):
+    """(cache, tokens, pos) abstract values + shardings for serve_step."""
+    b, s = shape.global_batch, shape.seq_len
+    dp = _dp_or_none(ctx, b)
+    dt = jnp.dtype(cfg.dtype)
+    cache = abstract_cache(cfg, b, s, ctx)
+    cache_sh = jax.tree.map(lambda sp: _ns(ctx, sp),
+                            cache_pspecs(cfg, ctx, b),
+                            is_leaf=lambda x: isinstance(x, P))
+    if cfg.embed_inputs:
+        tokens = jax.ShapeDtypeStruct((b, 1, cfg.d_model), dt)
+        tok_sh = _ns(ctx, P(dp, None, None))
+    else:
+        tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        tok_sh = _ns(ctx, P(dp, None))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return (cache, tokens, pos), (cache_sh, tok_sh, _ns(ctx, P()))
+
+
+def tree_named(ctx, pspec_tree):
+    """Wrap every PartitionSpec leaf (or None) into a NamedSharding."""
+    return jax.tree.map(
+        lambda sp: _ns(ctx, sp if sp is not None else P()),
+        pspec_tree,
+        is_leaf=lambda x: isinstance(x, P) or x is None)
+
+
+def param_shardings(cfg: ArchConfig, ctx: ParallelCtx):
+    return tree_named(ctx, param_pspecs(cfg, ctx))

@@ -1,0 +1,4 @@
+from repro.models.config import ArchConfig
+from repro.models.params import abstract_params, init_params, param_pspecs
+
+__all__ = ["ArchConfig", "abstract_params", "init_params", "param_pspecs"]

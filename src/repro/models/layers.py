@@ -1,0 +1,445 @@
+"""Core layers: RMSNorm, RoPE, GQA attention (full / chunked-causal flash /
+decode-with-cache), SwiGLU MLP. Pure functions over param dicts; sharding via
+ParallelCtx logical constraints.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard
+
+
+def rmsnorm(x, w, eps: float):
+    xf = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * rms).astype(x.dtype) * w.astype(x.dtype)
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: (S,) or (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q: (B,Sq,Hkv,G,D), k/v: (B,Skv,Hkv,D); mask broadcastable (B,1,1,Sq,Skv)."""
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return o
+
+
+def attention_full(q, k, v, *, causal: bool, ctx=None, window: int = 0):
+    """q: (B,S,Hq,D); k/v: (B,Skv,Hkv,D). Materializes (S,Skv) scores."""
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    qi = jnp.arange(sq)[:, None] + (skv - sq)
+    ki = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool) if not causal else (qi >= ki)
+    if window:
+        mask = mask & (qi - ki < window)
+    o = _sdpa(qg, k, v, mask[None, None, None], 1.0 / math.sqrt(d))
+    return o.reshape(b, sq, hq, d)
+
+
+def _pair_lists(t: int, chunk: int, causal: bool, window: int):
+    pairs = [(i, j) for i in range(t) for j in range(i + 1 if causal else t)
+             if not window or (i - j) * chunk < window + chunk]
+    return (jnp.asarray([p[0] for p in pairs], jnp.int32),
+            jnp.asarray([p[1] for p in pairs], jnp.int32), len(pairs))
+
+
+def _pair_mask(i, j, chunk: int, causal: bool, window: int):
+    qi_ = i * chunk + jnp.arange(chunk)[:, None]
+    ki_ = j * chunk + jnp.arange(chunk)[None, :]
+    mask = jnp.ones((chunk, chunk), bool)
+    if causal:
+        mask = mask & (qi_ >= ki_)
+    if window:
+        mask = mask & (qi_ - ki_ < window)
+    return mask
+
+
+def _flash_forward(qg, k, v, *, causal, chunk, window, unroll):
+    """Online-softmax block attention forward. Returns (out, lse)."""
+    b, s, hkv, g, d = qg.shape
+    t = s // chunk
+    scale = 1.0 / math.sqrt(d)
+    pi, pj, n_pairs = _pair_lists(t, chunk, causal, window)
+
+    acc0 = jnp.zeros((b, s, hkv, g, d), jnp.float32)
+    m0 = jnp.full((b, hkv, g, s), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, s), jnp.float32)
+
+    def step(carry, idx):
+        acc, m, l = carry
+        i, j = pi[idx], pj[idx]
+        qc = jax.lax.dynamic_slice_in_dim(qg, i * chunk, chunk, axis=1)
+        kc = jax.lax.dynamic_slice_in_dim(k, j * chunk, chunk, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, j * chunk, chunk, axis=1)
+        sco = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc,
+                         preferred_element_type=jnp.float32) * scale
+        mask = _pair_mask(i, j, chunk, causal, window)
+        sco = jnp.where(mask[None, None, None], sco, -jnp.inf)
+
+        mc = jax.lax.dynamic_slice_in_dim(m, i * chunk, chunk, axis=3)
+        lc = jax.lax.dynamic_slice_in_dim(l, i * chunk, chunk, axis=3)
+        ac = jax.lax.dynamic_slice_in_dim(acc, i * chunk, chunk, axis=1)
+        m_new = jnp.maximum(mc, sco.max(axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(sco - m_safe[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        alpha = jnp.where(jnp.isfinite(mc), jnp.exp(mc - m_safe), 0.0)
+        l_new = lc * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), vc)
+        a_new = ac * alpha.transpose(0, 3, 1, 2)[..., None] + pv
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, a_new, i * chunk, axis=1)
+        m = jax.lax.dynamic_update_slice_in_dim(m, m_new, i * chunk, axis=3)
+        l = jax.lax.dynamic_update_slice_in_dim(l, l_new, i * chunk, axis=3)
+        return (acc, m, l), None
+
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), jnp.arange(n_pairs),
+                                  unroll=unroll)
+    l_safe = jnp.maximum(l, 1e-20)
+    out = (acc / l_safe.transpose(0, 3, 1, 2)[..., None]).astype(qg.dtype)
+    lse = jnp.where(l > 0, jnp.where(jnp.isfinite(m), m, 0.0) +
+                    jnp.log(l_safe), -jnp.inf)
+    return out, lse                     # lse: (b, hkv, g, s)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_flash(causal: bool, chunk: int, window: int, unroll):
+    """Flash attention with a memory-exact custom VJP: the backward pass
+    recomputes per-block probabilities from the saved logsumexp instead of
+    letting scan save O(n_pairs) residuals (FlashAttention-2 backward)."""
+
+    @jax.custom_vjp
+    def fa(qg, k, v):
+        return _flash_forward(qg, k, v, causal=causal, chunk=chunk,
+                              window=window, unroll=unroll)[0]
+
+    def fwd(qg, k, v):
+        out, lse = _flash_forward(qg, k, v, causal=causal, chunk=chunk,
+                                  window=window, unroll=unroll)
+        return out, (qg, k, v, out, lse)
+
+    def bwd(res, do):
+        qg, k, v, out, lse = res
+        b, s, hkv, g, d = qg.shape
+        t = s // chunk
+        scale = 1.0 / math.sqrt(d)
+        pi, pj, n_pairs = _pair_lists(t, chunk, causal, window)
+        # delta = rowsum(do * out): (b, hkv, g, s)
+        delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32),
+                        axis=-1).transpose(0, 2, 3, 1)
+
+        dq0 = jnp.zeros((b, s, hkv, g, d), jnp.float32)
+        dk0 = jnp.zeros((b, s, hkv, d), jnp.float32)
+        dv0 = jnp.zeros((b, s, hkv, d), jnp.float32)
+
+        def step(carry, idx):
+            dq, dk, dv = carry
+            i, j = pi[idx], pj[idx]
+            qc = jax.lax.dynamic_slice_in_dim(qg, i * chunk, chunk, axis=1)
+            kc = jax.lax.dynamic_slice_in_dim(k, j * chunk, chunk, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, j * chunk, chunk, axis=1)
+            doc = jax.lax.dynamic_slice_in_dim(do, i * chunk, chunk, axis=1)
+            lsec = jax.lax.dynamic_slice_in_dim(lse, i * chunk, chunk, axis=3)
+            delc = jax.lax.dynamic_slice_in_dim(delta, i * chunk, chunk, axis=3)
+            sco = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc,
+                             preferred_element_type=jnp.float32) * scale
+            mask = _pair_mask(i, j, chunk, causal, window)
+            lse_safe = jnp.where(jnp.isfinite(lsec), lsec, 0.0)
+            p = jnp.exp(sco - lse_safe[..., None])
+            p = jnp.where(mask[None, None, None] & jnp.isfinite(lsec)[..., None],
+                          p, 0.0)
+            dvc = jnp.einsum("bhgqk,bqhgd->bkhd", p,
+                             doc.astype(jnp.float32))
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", doc.astype(jnp.float32),
+                            vc.astype(jnp.float32))
+            ds = p * (dp - delc[..., None]) * scale
+            dqc = jnp.einsum("bhgqk,bkhd->bqhgd", ds, kc.astype(jnp.float32))
+            dkc = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qc.astype(jnp.float32))
+            dq = jax.lax.dynamic_update_slice_in_dim(
+                dq, jax.lax.dynamic_slice_in_dim(dq, i * chunk, chunk, 1)
+                + dqc, i * chunk, axis=1)
+            dk = jax.lax.dynamic_update_slice_in_dim(
+                dk, jax.lax.dynamic_slice_in_dim(dk, j * chunk, chunk, 1)
+                + dkc, j * chunk, axis=1)
+            dv = jax.lax.dynamic_update_slice_in_dim(
+                dv, jax.lax.dynamic_slice_in_dim(dv, j * chunk, chunk, 1)
+                + dvc, j * chunk, axis=1)
+            return (dq, dk, dv), None
+
+        (dq, dk, dv), _ = jax.lax.scan(step, (dq0, dk0, dv0),
+                                       jnp.arange(n_pairs), unroll=unroll)
+        return dq.astype(qg.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+    fa.defvjp(fwd, bwd)
+    return fa
+
+
+def _flash_offset_fwd(qg, k, v, off, *, causal, chunk, window, unroll):
+    """Flash forward where the q rows sit at a *traced* global offset into the
+    kv context (context-parallel shards). The pair grid is the full
+    (s_q/chunk x s_kv/chunk) rectangle — causality is a runtime mask, so all
+    shards share one static program (~2x the causal-optimal FLOPs, but
+    distributed 1/tp). Plain differentiable scan: shard-local residuals are
+    1/tp-sized, so no custom VJP is needed here (and custom_vjp nested inside
+    shard_map inside scan is rejected by jax as of 0.8)."""
+    b, sq, hkv, g, d = qg.shape
+    skv = k.shape[1]
+    t_q, t_kv = sq // chunk, skv // chunk
+    pairs = [(i, j) for i in range(t_q) for j in range(t_kv)]
+    pi = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    pj = jnp.asarray([p[1] for p in pairs], jnp.int32)
+    scale = 1.0 / math.sqrt(d)
+
+    def mask_fn(i, j):
+        qi_ = off + i * chunk + jnp.arange(chunk)[:, None]
+        ki_ = j * chunk + jnp.arange(chunk)[None, :]
+        m = jnp.ones((chunk, chunk), bool)
+        if causal:
+            m = m & (qi_ >= ki_)
+        if window:
+            m = m & (qi_ - ki_ < window)
+        return m
+
+    acc0 = jnp.zeros((b, sq, hkv, g, d), jnp.float32)
+    m0 = jnp.full((b, hkv, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+
+    def step(carry, idx):
+        acc, m, l = carry
+        i, j = pi[idx], pj[idx]
+        qc = jax.lax.dynamic_slice_in_dim(qg, i * chunk, chunk, axis=1)
+        kc = jax.lax.dynamic_slice_in_dim(k, j * chunk, chunk, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, j * chunk, chunk, axis=1)
+        sco = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc,
+                         preferred_element_type=jnp.float32) * scale
+        mask = mask_fn(i, j)[None, None, None]
+        sco = jnp.where(mask, sco, -jnp.inf)
+        mc = jax.lax.dynamic_slice_in_dim(m, i * chunk, chunk, axis=3)
+        lc = jax.lax.dynamic_slice_in_dim(l, i * chunk, chunk, axis=3)
+        ac = jax.lax.dynamic_slice_in_dim(acc, i * chunk, chunk, axis=1)
+        m_new = jnp.maximum(mc, sco.max(axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.where(mask, jnp.exp(sco - m_safe[..., None]), 0.0)
+        alpha = jnp.where(jnp.isfinite(mc), jnp.exp(mc - m_safe), 0.0)
+        l_new = lc * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), vc)
+        a_new = ac * alpha.transpose(0, 3, 1, 2)[..., None] + pv
+        return (jax.lax.dynamic_update_slice_in_dim(acc, a_new, i * chunk, 1),
+                jax.lax.dynamic_update_slice_in_dim(m, m_new, i * chunk, 3),
+                jax.lax.dynamic_update_slice_in_dim(l, l_new, i * chunk, 3)), None
+
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), jnp.arange(len(pairs)),
+                                  unroll=unroll)
+    l_safe = jnp.maximum(l, 1e-20)
+    return (acc / l_safe.transpose(0, 3, 1, 2)[..., None]).astype(qg.dtype)
+
+
+def attention_chunked(q, k, v, *, causal: bool, chunk: int, ctx=None,
+                      window: int = 0, unroll=1):
+    """Flash-style block attention (custom-VJP; see _make_flash)."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    assert s % chunk == 0, (s, chunk)
+    qg = q.reshape(b, s, hkv, g, d)
+    fa = _make_flash(causal, chunk, window, unroll)
+    return fa(qg, k, v).reshape(b, s, hq, d)
+
+
+def attention_seqpar(q, k, v, *, causal: bool, chunk: int, ctx,
+                     window: int = 0, unroll=1):
+    """Context-parallel attention for archs whose head counts do not divide
+    the TP axis (whisper 20H, starcoder2 24H): q is sharded over the context
+    dim on the TP axis, K/V replicate (all-gathered at the shard_map
+    boundary), and each shard runs a *local* flash scan over its q rows with
+    an axis_index-offset causal mask. FLOPs distribute 1/tp; dK/dV cotangents
+    psum automatically through the shard_map transpose."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    tp = ctx.tp_size
+    dp_spec = tuple(ctx.dp_axes) if ctx.dp_axes else None
+    dpb = dp_spec if b % max(ctx.dp_size, 1) == 0 and b >= ctx.dp_size else None
+    s_local = s // tp
+    c = min(chunk, s_local)
+
+    def body(qb, kb, vb):
+        off = jax.lax.axis_index(ctx.tp_axis) * s_local
+        qg = qb.reshape(qb.shape[0], s_local, hkv, g, d)
+        o = _flash_offset_fwd(qg, kb, vb, off, causal=causal, chunk=c,
+                              window=window, unroll=unroll)
+        return o.reshape(qb.shape[0], s_local, hq, d)
+
+    from jax.sharding import PartitionSpec as P
+    return jax.shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(P(dpb, ctx.tp_axis, None, None),
+                  P(dpb, None, None, None), P(dpb, None, None, None)),
+        out_specs=P(dpb, ctx.tp_axis, None, None),
+        check_vma=False)(q, k, v)
+
+
+def attention(q, k, v, *, causal: bool, chunk: int = 0, ctx=None,
+              window: int = 0, unroll=1):
+    s = q.shape[1]
+    if (ctx is not None and not ctx.shard_heads and ctx.tp_size > 1
+            and s % ctx.tp_size == 0 and s >= 2 * ctx.tp_size
+            and k.shape[1] == s):
+        return attention_seqpar(q, k, v, causal=causal,
+                                chunk=chunk or s, ctx=ctx, window=window,
+                                unroll=unroll)
+    if chunk and s > chunk and s % chunk == 0:
+        return attention_chunked(q, k, v, causal=causal, chunk=chunk, ctx=ctx,
+                                 window=window, unroll=unroll)
+    # indivisible contexts (e.g. whisper's 1500-frame encoder) take the
+    # full-einsum path; the context dim still shards via the q constraint
+    return attention_full(q, k, v, causal=causal, ctx=ctx, window=window)
+
+
+def decode_attention(q, k_cache, v_cache, q_pos, *, ctx=None, window: int = 0,
+                     ring_pos=None):
+    """Attention of q tokens at absolute positions q_pos (Sq,) against a
+    (B, Smax, Hkv, D) cache whose entries <= q_pos are valid. The cache
+    context dim is sharded over the TP axis — softmax statistics combine
+    across shards via GSPMD-inserted collectives (flash-decode pattern).
+    ring_pos (scalar): the cache is a ring buffer whose slots all hold
+    in-window positions once warm; mask only unwritten slots."""
+    b, sq, hq, d = q.shape
+    hkv = k_cache.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    ki = jnp.arange(k_cache.shape[1])[None, :]
+    if ring_pos is not None:
+        mask = ki <= jnp.asarray(ring_pos, jnp.int32)
+    else:
+        qp = jnp.asarray(q_pos).reshape(-1)[:, None]
+        mask = ki <= qp
+        if window:
+            mask = mask & (ki > qp - window)
+    o = _sdpa(qg, k_cache, v_cache, mask[None, None, None],
+              1.0 / math.sqrt(d))
+    return o.reshape(b, sq, hq, d)
+
+
+def swiglu(x, w1, w3, w2, ctx=None):
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    h = shard(h, ctx, "dp", None, "tp")
+    out = h @ w2
+    if ctx is not None and ctx.tp_seq_collectives and out.ndim == 3 and \
+            out.shape[1] > 1:
+        out = shard(out, ctx, "dp", "sp_seq", None)
+    return out
+
+
+def attn_block(x, p, *, positions, cfg, ctx, cache=None, pos=None,
+               kv_override=None, causal=True):
+    """Pre-norm attention block. Returns (residual output, new_kv).
+
+    cache: optional (k_cache, v_cache) for decode; kv_override: (k, v) for
+    cross-attention (already projected? no — raw encoder states to project).
+    """
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    b, s, d = h.shape
+    hd = cfg.head_dim
+    q = (h @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    src = h if kv_override is None else kv_override
+    k = (src @ p["wk"]).reshape(b, src.shape[1], cfg.n_kv_heads, hd)
+    v = (src @ p["wv"]).reshape(b, src.shape[1], cfg.n_kv_heads, hd)
+    if kv_override is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions if cache is None else positions, cfg.rope_theta)
+    q = shard(q, ctx, "dp", None, "tp_heads", None)
+    k = shard(k, ctx, "dp", None, "tp_kv", None)
+    v = shard(v, ctx, "dp", None, "tp_kv", None)
+
+    def expand_kv(k, v):
+        """Under head-sharded TP with kv_heads % tp != 0, repeat KV up to Hq
+        so the (head-sharded) einsum needs no cross-shard KV (Megatron GQA
+        expansion). Decode instead context-shards the compact cache."""
+        tp = ctx.tp_size if ctx is not None else 1
+        if ctx is None or not ctx.shard_heads or tp <= 1 or \
+                cfg.n_kv_heads % tp == 0:
+            return k, v
+        rep = cfg.n_heads // cfg.n_kv_heads
+        k = shard(jnp.repeat(k, rep, axis=2), ctx, "dp", None, "tp_heads", None)
+        v = shard(jnp.repeat(v, rep, axis=2), ctx, "dp", None, "tp_heads", None)
+        return k, v
+
+    new_kv = None
+    if cache is not None:                      # decode/prefill with cache
+        k_cache, v_cache = cache
+        # window-sized cache => ring buffer semantics (see init_cache)
+        ring = bool(cfg.attn_window) and k_cache.shape[1] == cfg.attn_window
+        if ring:
+            w = cfg.attn_window
+            if s > 1:    # prefill: keep the last `w` positions (s % w == 0)
+                k_cache = k[:, -w:] if s >= w else \
+                    jax.lax.dynamic_update_slice_in_dim(k_cache, k, pos, 1)
+                v_cache = v[:, -w:] if s >= w else \
+                    jax.lax.dynamic_update_slice_in_dim(v_cache, v, pos, 1)
+            else:
+                slot = jax.lax.rem(jnp.asarray(pos, jnp.int32), w)
+                k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot, 1)
+                v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot, 1)
+        else:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, pos, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, pos, axis=1)
+        new_kv = (k_cache, v_cache)
+        if s > 1:
+            # prefill: attend over the fresh K/V with the flash path (assumes
+            # an empty cache below `pos`, i.e. pos == 0 for our shapes)
+            ke, ve = expand_kv(k, v)
+            o = attention(q, ke, ve, causal=True, chunk=cfg.attn_chunk,
+                          ctx=ctx, window=cfg.attn_window,
+                          unroll=cfg.scan_unroll or 1)
+        elif ring:
+            # all ring slots hold positions in (pos - w, pos]; mask only the
+            # not-yet-written slots during warmup
+            o = decode_attention(q, k_cache, v_cache, positions, ctx=ctx,
+                                 window=0, ring_pos=pos)
+        else:
+            o = decode_attention(q, k_cache, v_cache, positions, ctx=ctx,
+                                 window=cfg.attn_window)
+    elif kv_override is not None:              # cross-attention
+        # encoder context is short (<= enc_ctx): full einsum attention, with
+        # q context-sharded when heads aren't TP-divisible (whisper)
+        q = shard(q, ctx, "dp", "sp", None, None)
+        ke, ve = expand_kv(k, v)
+        o = attention_full(q, ke, ve, causal=False, ctx=ctx)
+        new_kv = (k, v)
+    else:
+        ke, ve = expand_kv(k, v)
+        o = attention(q, ke, ve, causal=causal, chunk=cfg.attn_chunk, ctx=ctx,
+                      window=cfg.attn_window, unroll=cfg.scan_unroll or 1)
+        new_kv = (k, v)
+    o = o.reshape(b, s, cfg.q_dim)
+    o_proj = o @ p["wo"]
+    if ctx is not None and ctx.tp_seq_collectives and s > 1:
+        o_proj = shard(o_proj, ctx, "dp", "sp_seq", None)
+    return x + o_proj, new_kv
+
+
+def mlp_block(x, p, cfg, ctx, d_ff=None):
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    return x + swiglu(h, p["w1"], p["w3"], p["w2"], ctx)

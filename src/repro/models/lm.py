@@ -1,0 +1,288 @@
+"""Model assembly: train forward, prefill, and single-token decode for all
+assigned families (dense / moe / ssm / hybrid / encdec / vlm).
+
+Layers are lax.scan-stacked (params carry a leading L dim), with optional
+per-block rematerialization. Decode threads a per-layer cache pytree through
+the same scan. The hybrid (Zamba2) family interleaves a python-level loop of
+scan segments with its single shared attention block (parameter reuse — the
+Zamba signature).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import attn_block, mlp_block, rmsnorm
+from repro.models.moe import moe_block
+from repro.models.ssm import init_ssm_cache, mamba_block
+from repro.parallel.sharding import shard
+
+
+# --------------------------------------------------------------- embedding
+def embed(params, tokens, cfg: ArchConfig, ctx):
+    w = params["embed"]["w"]
+    h = jnp.take(w, tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    return shard(h, ctx, "dp", None, None)
+
+
+def unembed(params, h, cfg: ArchConfig, ctx):
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"]["w"].T
+    else:
+        logits = h @ params["lm_head"]["w"]
+    logits = shard(logits, ctx, "dp", None, "tp")
+    # mask vocab padding
+    neg = jnp.asarray(-1e30, logits.dtype)
+    return jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab, logits, neg)
+
+
+# ------------------------------------------------------------ layer bodies
+def _dense_body(cfg, ctx, causal=True):
+    def body(h, lp, positions, cache=None, pos=None):
+        h, kv = attn_block(h, lp["attn"], positions=positions, cfg=cfg,
+                           ctx=ctx, cache=cache and cache.get("kv"), pos=pos,
+                           causal=causal)
+        h = mlp_block(h, lp["mlp"], cfg, ctx)
+        new_cache = {"kv": kv} if cache is not None else None
+        return h, new_cache, {}
+    return body
+
+
+def _moe_body(cfg, ctx):
+    def body(h, lp, positions, cache=None, pos=None):
+        h, kv = attn_block(h, lp["attn"], positions=positions, cfg=cfg,
+                           ctx=ctx, cache=cache and cache.get("kv"), pos=pos)
+        h, aux = moe_block(h, lp["moe"], cfg, ctx)
+        new_cache = {"kv": kv} if cache is not None else None
+        return h, new_cache, aux
+    return body
+
+
+def _ssm_body(cfg, ctx):
+    def body(h, lp, positions, cache=None, pos=None):
+        h, nc = mamba_block(h, lp["mamba"], cfg, ctx, cache=cache)
+        return h, nc, {}
+    return body
+
+
+def _scan_layers(body, h, layer_params, positions, cfg, *, ctx=None,
+                 cache=None, pos=None):
+    """Scan `body` over stacked layer params (and per-layer cache).
+
+    The carry (= the per-layer remat residual) is constrained to
+    sequence-parallel sharding: saved activations shard their context dim over
+    the TP axis, cutting remat HBM by 1/tp at the cost of a per-layer
+    (all-)gather that overlaps with layer compute."""
+    seq_par = h.shape[1] > 1
+
+    def f(carry, xs):
+        lp, lc = xs
+        hh, nc, aux = body(carry, lp, positions, cache=lc, pos=pos)
+        if seq_par:
+            hh = shard(hh, ctx, "dp", "sp_seq", None)
+        return hh, (nc, aux)
+
+    if cfg.remat == "block":
+        f = jax.checkpoint(f)
+    if seq_par:
+        h = shard(h, ctx, "dp", "sp_seq", None)
+    h, (new_cache, aux) = jax.lax.scan(f, h, (layer_params, cache),
+                                       unroll=cfg.scan_unroll or 1)
+    return h, new_cache, aux
+
+
+# ------------------------------------------------------- forward (by family)
+def _hybrid_segments(cfg: ArchConfig):
+    """Layer-count segments between shared-attention applications."""
+    per = cfg.shared_attn_period or cfg.n_layers
+    segs, left = [], cfg.n_layers
+    while left > 0:
+        segs.append(min(per, left))
+        left -= per
+    return segs
+
+
+def _shared_attn(h, h0, params, cfg, ctx, positions, cache=None, pos=None,
+                 idx=0):
+    """Zamba2 shared block: concat(current, embedding output) -> proj -> attn
+    -> mlp with one shared parameter set; per-application KV cache slot."""
+    sp = params["shared"]
+    x = jnp.concatenate([h, h0], axis=-1) @ sp["in_proj"]
+    kv = None
+    if cache is not None:
+        kv = jax.tree.map(lambda c: c[idx], cache["shared_kv"])
+    x, new_kv = attn_block(x, sp["attn"], positions=positions, cfg=cfg,
+                           ctx=ctx, cache=kv, pos=pos)
+    x = mlp_block(x, sp["mlp"], cfg, ctx)
+    return h + x, new_kv
+
+
+def forward(params, inputs, cfg: ArchConfig, ctx, *, cache=None, pos=None):
+    """inputs: tokens (B,S) int32, or embeddings (B,S,d) for vlm; for encdec a
+    dict {enc: (B,enc_ctx,d), tokens: (B,S)}. Returns (logits, aux, cache)."""
+    if cfg.family == "encdec":
+        return _forward_encdec(params, inputs, cfg, ctx, cache=cache, pos=pos)
+
+    if cfg.embed_inputs:
+        h = inputs.astype(jnp.dtype(cfg.dtype))
+    else:
+        h = embed(params, inputs, cfg, ctx)
+    b, s = h.shape[:2]
+    positions = (jnp.arange(s) if pos is None
+                 else jnp.asarray(pos)[None] + jnp.arange(s))
+
+    aux = {}
+    if cfg.family in ("dense", "vlm"):
+        body = _dense_body(cfg, ctx)
+        h, new_cache, aux = _scan_layers(body, h, params["layers"], positions,
+                                         cfg, ctx=ctx, cache=cache, pos=pos)
+    elif cfg.family == "moe":
+        body = _moe_body(cfg, ctx)
+        h, new_cache, aux = _scan_layers(body, h, params["layers"], positions,
+                                         cfg, ctx=ctx, cache=cache, pos=pos)
+    elif cfg.family == "ssm":
+        body = _ssm_body(cfg, ctx)
+        h, new_cache, aux = _scan_layers(body, h, params["layers"], positions,
+                                         cfg, ctx=ctx, cache=cache, pos=pos)
+    elif cfg.family == "hybrid":
+        h0 = h
+        body = _ssm_body(cfg, ctx)
+        segs = _hybrid_segments(cfg)
+        off = 0
+        # cache slices are written back in place (donation-friendly: no
+        # stack/concat rebuild, which would double the 500k-context KV live
+        # footprint)
+        new_cache = cache
+        for i, seg in enumerate(segs):
+            h, skv = _shared_attn(h, h0, params, cfg, ctx, positions,
+                                  cache=new_cache, pos=pos, idx=i)
+            lp = jax.tree.map(lambda t: t[off:off + seg], params["layers"])
+            lc = None
+            if new_cache is not None:
+                lc = jax.tree.map(lambda t: t[off:off + seg],
+                                  new_cache["mamba"])
+            h, nc, _ = _scan_layers(body, h, lp, positions, cfg, ctx=ctx,
+                                    cache=lc, pos=pos)
+            if new_cache is not None:
+                # static-index dynamic-update-slice, NOT .at[j].set(): the
+                # latter lowers to scatter, which GSPMD replicates (a 2x-f32
+                # copy of the whole 500k-context KV stack)
+                new_cache = {
+                    "mamba": jax.tree.map(
+                        lambda full, new, o=off: jax.lax.dynamic_update_slice_in_dim(
+                            full, new.astype(full.dtype), o, axis=0),
+                        new_cache["mamba"], nc),
+                    "shared_kv": jax.tree.map(
+                        lambda full, new, j=i: jax.lax.dynamic_update_slice_in_dim(
+                            full, new.astype(full.dtype)[None], j, axis=0),
+                        new_cache["shared_kv"], skv),
+                }
+            off += seg
+    else:
+        raise ValueError(cfg.family)
+
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, h, cfg, ctx)
+    return logits, aux, new_cache
+
+
+def _forward_encdec(params, inputs, cfg: ArchConfig, ctx, *, cache=None,
+                    pos=None):
+    dt = jnp.dtype(cfg.dtype)
+    if cache is None or "enc_out" not in (cache or {}):
+        enc = inputs["enc"].astype(dt) + params["enc_pos"]["w"][None].astype(dt)
+        epos = jnp.arange(cfg.enc_ctx)
+        ebody = _dense_body(cfg, ctx, causal=False)
+        enc, _, _ = _scan_layers(ebody, enc, params["enc_layers"], epos, cfg,
+                                 ctx=ctx)
+        enc = rmsnorm(enc, params["enc_final_norm"], cfg.norm_eps)
+    else:
+        enc = cache["enc_out"]
+
+    tokens = inputs["tokens"] if isinstance(inputs, dict) else inputs
+    h = embed(params, tokens, cfg, ctx)
+    b, s = h.shape[:2]
+    positions = (jnp.arange(s) if pos is None
+                 else jnp.asarray(pos)[None] + jnp.arange(s))
+
+    def body(hh, lp, positions, cache=None, pos=None):
+        hh, kv = attn_block(hh, lp["self_attn"], positions=positions, cfg=cfg,
+                            ctx=ctx, cache=cache and cache.get("kv"), pos=pos)
+        hh, xkv = attn_block(hh, lp["cross_attn"], positions=positions,
+                             cfg=cfg, ctx=ctx, kv_override=enc)
+        hh = mlp_block(hh, lp["mlp"], cfg, ctx)
+        nc = {"kv": kv} if cache is not None else None
+        return hh, nc, {}
+
+    lc = cache["dec"] if cache is not None else None
+    h, new_dec_cache, _ = _scan_layers(body, h, params["dec_layers"],
+                                       positions, cfg, ctx=ctx, cache=lc,
+                                       pos=pos)
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, h, cfg, ctx)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"dec": new_dec_cache, "enc_out": enc}
+    return logits, {}, new_cache
+
+
+# ------------------------------------------------------------------- cache
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, ctx) -> dict:
+    """Abstract-friendly cache pytree for decode.
+
+    Sliding-window archs get a *ring buffer* of window size: a 500k-context
+    decode then holds O(window) KV instead of O(context) (Mistral-style
+    rolling cache; slot = position mod window)."""
+    dt = jnp.dtype(cfg.dtype)
+    L = cfg.n_layers
+
+    def kv(n_layers, seq):
+        if cfg.attn_window:
+            seq = min(seq, cfg.attn_window)
+        return {"kv": (
+            jnp.zeros((n_layers, batch, seq, cfg.n_kv_heads, cfg.head_dim), dt),
+            jnp.zeros((n_layers, batch, seq, cfg.n_kv_heads, cfg.head_dim), dt),
+        )}
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        return kv(L, max_seq)
+    if cfg.family == "ssm":
+        c = init_ssm_cache(cfg, batch, dt)
+        return jax.tree.map(
+            lambda t: jnp.broadcast_to(t[None], (L,) + t.shape), c)
+    if cfg.family == "hybrid":
+        c = init_ssm_cache(cfg, batch, dt)
+        n_seg = len(_hybrid_segments(cfg))
+        return {
+            "mamba": jax.tree.map(
+                lambda t: jnp.broadcast_to(t[None], (L,) + t.shape), c),
+            "shared_kv": kv(n_seg, max_seq)["kv"],
+        }
+    if cfg.family == "encdec":
+        return {
+            "dec": kv(cfg.n_dec_layers, max_seq),
+            "enc_out": jnp.zeros((batch, cfg.enc_ctx, cfg.d_model), dt),
+        }
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------- losses
+def lm_loss(logits, labels, cfg: ArchConfig):
+    """Mean CE over labels >= 0 (f32 logsumexp).
+
+    The label log-prob is extracted with an iota mask rather than
+    take_along_axis: elementwise select partitions cleanly over a
+    vocab-sharded logits tensor (a gather would force an all-gather of the
+    full logits under GSPMD)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    vio = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    ll = jnp.sum(jnp.where(vio == labels[..., None], lf, 0.0), axis=-1)
+    mask = (labels >= 0).astype(jnp.float32)
+    n = jnp.maximum(mask.sum(), 1.0)
+    return jnp.sum((lse - ll) * mask) / n

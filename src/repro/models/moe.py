@@ -1,0 +1,224 @@
+"""Mixture-of-Experts layer with expert parallelism over the TP axis.
+
+Token dispatch IS the paper's problem (DESIGN.md Section 4.1): partition T
+tokens across expert shards under a static (1+eps) capacity. The dispatch is
+an explicit shard_map so the all-to-all is exactly the capacity-padded dense
+exchange from repro.core.exchange — sort assignments by destination shard
+(argsort = sort-based dispatch), pack per-destination capacity slots, one
+fused all_to_all, grouped-GEMM locally, reverse all_to_all, weighted combine
+at the source. Dropped (over-capacity) assignments are counted and returned.
+
+Two static paths:
+  big-T   (train/prefill): tokens context-sharded over the TP axis; a2a moves
+          only routed activations (2 x T*k*d/ep per device per direction).
+  small-T (decode): tokens replicated over TP; every shard computes its local
+          experts for all tokens and the outputs psum-combine. No a2a.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.common import round_up
+from repro.models.layers import rmsnorm, swiglu
+from repro.parallel.sharding import shard
+
+
+def _group_slots(sorted_group_ids, n_groups: int, capacity: int):
+    """Positions of already-sorted group ids within per-group capacity bins.
+
+    Returns (slot, keep): slot in [0, n_groups*capacity) for kept entries.
+    """
+    n = sorted_group_ids.shape[0]
+    starts = jnp.searchsorted(sorted_group_ids, jnp.arange(n_groups),
+                              side="left").astype(jnp.int32)
+    pos = jnp.arange(n, dtype=jnp.int32) - starts[
+        jnp.clip(sorted_group_ids, 0, n_groups - 1)]
+    valid = (sorted_group_ids >= 0) & (sorted_group_ids < n_groups)
+    keep = valid & (pos < capacity)
+    slot = jnp.clip(sorted_group_ids, 0, n_groups - 1) * capacity + \
+        jnp.clip(pos, 0, capacity - 1)
+    return jnp.where(keep, slot, n_groups * capacity), keep
+
+
+def _expert_ffn(buf, w1, w3, w2):
+    """buf: (E_local, C, d); w*: (E_local, d, f) / (E_local, f, d)."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w1))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, w3)
+    return jnp.einsum("ecf,efd->ecd", h, w2)
+
+
+def _route(flat, wr, k):
+    logits = (flat @ wr).astype(jnp.float32)             # (t, E)
+    gates, eids = jax.lax.top_k(logits, k)               # (t, k)
+    gates = jax.nn.softmax(gates, axis=-1)
+    # aux stats for load-balance loss (psum'd by caller where needed)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return gates, eids, probs
+
+
+def _moe_local(flat, wr, w1, w3, w2, *, k, e_local, e0, capacity):
+    """Small-T path body: tokens replicated; compute local experts only."""
+    t = flat.shape[0]
+    gates, eids, probs = _route(flat, wr, k)
+    flat_e = eids.reshape(-1)
+    flat_g = gates.reshape(-1)
+    tok = jnp.arange(t * k, dtype=jnp.int32) // k
+    e_rel = jnp.where((flat_e >= e0) & (flat_e < e0 + e_local),
+                      flat_e - e0, -1)
+    order = jnp.argsort(e_rel, stable=True)
+    # -1 (non-local) sort first; shift them out by treating them as invalid
+    slot, keep = _group_slots(e_rel[order], e_local, capacity)
+    rows = flat[tok[order]] * keep[:, None].astype(flat.dtype)
+    buf = jnp.zeros((e_local * capacity + 1, flat.shape[1]), flat.dtype)
+    buf = buf.at[slot].set(rows)
+    out_e = _expert_ffn(buf[:-1].reshape(e_local, capacity, -1), w1, w3, w2)
+    y = out_e.reshape(e_local * capacity, -1)
+    y = jnp.concatenate([y, jnp.zeros((1, y.shape[1]), y.dtype)])
+    contrib = y[slot] * (flat_g[order] * keep)[:, None].astype(y.dtype)
+    out = jnp.zeros_like(flat).at[tok[order]].add(contrib)
+    dropped = jnp.sum((e_rel[order] >= 0) & ~keep)
+    return out, probs, dropped
+
+
+def _moe_a2a(flat, wr, w1, w3, w2, *, k, ep, e_local, tp_axis, cap1, cap2,
+             a2a_dtype=None):
+    """Big-T path body: flat (t_local, d) context-sharded over tp_axis."""
+    t, d = flat.shape
+    wire = a2a_dtype or flat.dtype
+    gates, eids, probs = _route(flat, wr, k)
+    flat_e = eids.reshape(-1)
+    flat_g = gates.reshape(-1)
+    tok = jnp.arange(t * k, dtype=jnp.int32) // k
+    dest = flat_e // e_local
+    order = jnp.argsort(dest, stable=True)               # sort-based dispatch
+    slot1, keep1 = _group_slots(dest[order], ep, cap1)
+    rows = (flat[tok[order]] * keep1[:, None].astype(flat.dtype)).astype(wire)
+    send = jnp.zeros((ep * cap1 + 1, d), wire).at[slot1].set(rows)
+    send_e = jnp.full((ep * cap1 + 1,), -1, jnp.int32).at[slot1].set(
+        jnp.where(keep1, flat_e[order], -1))
+    recv = jax.lax.all_to_all(send[:-1].reshape(ep, cap1, d), tp_axis, 0, 0,
+                              tiled=False).reshape(ep * cap1, d).astype(flat.dtype)
+    recv_e = jax.lax.all_to_all(send_e[:-1].reshape(ep, cap1, 1), tp_axis,
+                                0, 0, tiled=False).reshape(ep * cap1)
+    me = jax.lax.axis_index(tp_axis)
+    e_rel = jnp.where(recv_e >= 0, recv_e - me * e_local, -1)
+    order2 = jnp.argsort(e_rel, stable=True)
+    slot2, keep2 = _group_slots(e_rel[order2], e_local, cap2)
+    rows2 = recv[order2] * keep2[:, None].astype(recv.dtype)
+    buf = jnp.zeros((e_local * cap2 + 1, d), recv.dtype).at[slot2].set(rows2)
+    out_e = _expert_ffn(buf[:-1].reshape(e_local, cap2, d), w1, w3, w2)
+    y = jnp.concatenate([out_e.reshape(e_local * cap2, d),
+                         jnp.zeros((1, d), out_e.dtype)])
+    # back to received-slot order, then reverse a2a to the sources
+    y_recv = jnp.zeros((ep * cap1, d), wire)
+    y_recv = y_recv.at[order2].set(
+        (y[slot2] * keep2[:, None].astype(y.dtype)).astype(wire))
+    y_home = jax.lax.all_to_all(y_recv.reshape(ep, cap1, d), tp_axis, 0, 0,
+                                tiled=False).reshape(ep * cap1, d)
+    y_home = y_home.astype(flat.dtype)
+    y_home = jnp.concatenate([y_home, jnp.zeros((1, d), y_home.dtype)])
+    contrib = y_home[slot1] * (flat_g[order] * keep1)[:, None].astype(y_home.dtype)
+    out = jnp.zeros_like(flat).at[tok[order]].add(contrib)
+    dropped = jnp.sum(~keep1) + jnp.sum((e_rel[order2] >= 0) & ~keep2)
+    return out, probs, dropped
+
+
+def moe_ffn(x, p, cfg, ctx):
+    """x: (B, S, d) global. Returns (y, aux) where aux carries router stats."""
+    b, s, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    tp = ctx.tp_size
+    ep = tp
+    e_local = E // ep
+    dp_spec = tuple(ctx.dp_axes) if ctx.dp_axes else None
+    t_global = b * s
+    big = s % tp == 0 and s >= tp and t_global // (ctx.dp_size * tp) >= 1 and s > 1
+
+    if big:
+        t_local = t_global // (ctx.dp_size * tp)
+        cap1 = round_up(int(math.ceil(t_local * k / ep * cfg.moe_capacity_factor)), 8)
+        cap2 = round_up(int(math.ceil(t_local * k / e_local * cfg.moe_capacity_factor)), 8)
+        in_x = P(dp_spec, ctx.tp_axis, None)
+        w_specs = (P(ctx.tp_axis, None, None), P(ctx.tp_axis, None, None),
+                   P(ctx.tp_axis, None, None))
+    else:
+        # decode (weights-stationary): tokens replicate everywhere (MBs),
+        # expert weights stay in their stored (EP x ffe-FSDP) shards (GBs
+        # per layer that now never move); partial-ffe outputs psum.
+        t_local = t_global
+        cap2 = round_up(int(math.ceil(t_local * k / e_local
+                                      * cfg.moe_capacity_factor)), 8)
+        cap2 = min(cap2, round_up(t_local * k, 8))
+        cap1 = 0
+        in_x = P(None, None, None)
+        w_specs = (P(ctx.tp_axis, None, dp_spec),
+                   P(ctx.tp_axis, None, dp_spec),
+                   P(ctx.tp_axis, dp_spec, None))
+
+    all_axes = tuple(ctx.dp_axes or ()) + ((ctx.tp_axis,) if ctx.tp_axis else ())
+
+    # Optionally ship expert weights through the FSDP gather in a narrower
+    # dtype (fp8): the cast runs on the *sharded* value, the shard_map
+    # boundary gather moves half the bytes, and the body upcasts to compute
+    # dtype. Beyond-paper lever for gather-bound 1T-class MoE (kimi).
+    gdt = jnp.dtype(cfg.moe_gather_dtype) if cfg.moe_gather_dtype else None
+    w_in = [p["w1"], p["w3"], p["w2"]]
+    if gdt is not None and big:
+        # pin the cast output to the *sharded* layout so the boundary gather
+        # moves fp8 bytes (otherwise XLA may gather bf16 first, then cast)
+        from jax.sharding import NamedSharding
+        fsdp = tuple(ctx.dp_axes) if ctx.dp_axes else None
+        pins = [P(ctx.tp_axis, None, fsdp), P(ctx.tp_axis, None, fsdp),
+                P(ctx.tp_axis, fsdp, None)]
+        w_in = [jax.lax.with_sharding_constraint(
+                    w.astype(gdt), NamedSharding(ctx.mesh, pin))
+                for w, pin in zip(w_in, pins)]
+
+    def body(xb, wr, w1, w3, w2):
+        if gdt is not None:
+            cdt = jnp.dtype(cfg.dtype)
+            w1, w3, w2 = w1.astype(cdt), w3.astype(cdt), w2.astype(cdt)
+        flat = xb.reshape(-1, d)
+        if big:
+            adt = jnp.dtype(cfg.moe_a2a_dtype) if cfg.moe_a2a_dtype else None
+            out, probs, dropped = _moe_a2a(
+                flat, wr, w1, w3, w2, k=k, ep=ep, e_local=e_local,
+                tp_axis=ctx.tp_axis, cap1=cap1, cap2=cap2, a2a_dtype=adt)
+        else:
+            me = jax.lax.axis_index(ctx.tp_axis)
+            out, probs, dropped = _moe_local(
+                flat, wr, w1, w3, w2, k=k, e_local=e_local,
+                e0=me * e_local, capacity=cap2)
+            # combine expert-parallel (tp) AND partial-ffe (fsdp) sums
+            out = jax.lax.psum(out, all_axes)
+        # replicated stats: mean router prob per expert (pmean of values that
+        # are identical across replicated shards is exact) + global drops
+        # (decode path: every dp shard counts the same drops -> divide out)
+        mean_prob = jax.lax.pmean(probs.mean(axis=0), all_axes)
+        dropped = jax.lax.psum(dropped, all_axes)
+        if not big:
+            dropped = dropped // max(ctx.dp_size, 1)
+        return out.reshape(xb.shape), mean_prob, dropped
+
+    shmap = jax.shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(in_x, P()) + w_specs,
+        out_specs=(in_x, P(), P()),
+        check_vma=False)
+    y, mean_prob, dropped = shmap(x, p["router"], *w_in)
+    aux = {"router_mean_prob": mean_prob, "dropped": dropped}
+    return y, aux
+
+
+def moe_block(x, p, cfg, ctx):
+    """Pre-norm MoE block with optional shared experts."""
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    y, aux = moe_ffn(h, p, cfg, ctx)
+    if cfg.n_shared_experts:
+        y = y + swiglu(h, p["shared_w1"], p["shared_w3"], p["shared_w2"], ctx)
+    return x + y, aux

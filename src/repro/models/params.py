@@ -1,0 +1,181 @@
+"""Single-source-of-truth parameter layout: shapes + logical sharding + init.
+
+arch_layout(cfg) returns a flat {path: ParamSpec} dict; init_params /
+abstract_params / param_pspecs are derived views of the same layout, so the
+shapes a dry-run compiles against are byte-identical to what training
+initializes and what the checkpointer writes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    logical: tuple            # logical axis name (or None) per dim
+    init: str = "normal"      # normal | zeros | ones | ssm_a | ssm_dt
+
+
+def _attn(prefix, cfg: ArchConfig, L, d=None):
+    d = d or cfg.d_model
+    qd, kd = cfg.q_dim, cfg.kv_dim
+    return {
+        f"{prefix}/norm": ParamSpec((L, d), (None, None), "ones"),
+        f"{prefix}/wq": ParamSpec((L, d, qd), (None, "fsdp", "tp_heads")),
+        f"{prefix}/wk": ParamSpec((L, d, kd), (None, "fsdp", "tp_kv")),
+        f"{prefix}/wv": ParamSpec((L, d, kd), (None, "fsdp", "tp_kv")),
+        f"{prefix}/wo": ParamSpec((L, qd, d), (None, "tp_heads", "fsdp")),
+    }
+
+
+def _mlp(prefix, cfg: ArchConfig, L, d_ff=None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        f"{prefix}/norm": ParamSpec((L, d), (None, None), "ones"),
+        f"{prefix}/w1": ParamSpec((L, d, ff), (None, "fsdp", "tp")),
+        f"{prefix}/w3": ParamSpec((L, d, ff), (None, "fsdp", "tp")),
+        f"{prefix}/w2": ParamSpec((L, ff, d), (None, "tp", "fsdp")),
+    }
+
+
+def _moe(prefix, cfg: ArchConfig, L):
+    d, ffe, E = cfg.d_model, cfg.d_ff_expert or cfg.d_ff, cfg.n_experts
+    out = {
+        f"{prefix}/norm": ParamSpec((L, d), (None, None), "ones"),
+        f"{prefix}/router": ParamSpec((L, d, E), (None, "fsdp", None)),
+        # experts use their own logical axis (tp_exp): EP survives even when
+        # an arch policy un-TPs the dense dims (kimi context-parallel mode).
+        # FSDP shards the *ffe* dim: training gathers the same bytes, but
+        # decode can run weights-stationary (partial-ffe compute + psum of
+        # MB-scale token activations instead of GB-scale weight gathers)
+        f"{prefix}/w1": ParamSpec((L, E, d, ffe), (None, "tp_exp", None, "fsdp")),
+        f"{prefix}/w3": ParamSpec((L, E, d, ffe), (None, "tp_exp", None, "fsdp")),
+        f"{prefix}/w2": ParamSpec((L, E, ffe, d), (None, "tp_exp", "fsdp", None)),
+    }
+    if cfg.n_shared_experts:
+        ffs = ffe * cfg.n_shared_experts
+        out.update({
+            f"{prefix}/shared_w1": ParamSpec((L, d, ffs), (None, "fsdp", "tp")),
+            f"{prefix}/shared_w3": ParamSpec((L, d, ffs), (None, "fsdp", "tp")),
+            f"{prefix}/shared_w2": ParamSpec((L, ffs, d), (None, "tp", "fsdp")),
+        })
+    return out
+
+
+def _mamba(prefix, cfg: ArchConfig, L):
+    d, di = cfg.d_model, cfg.d_inner
+    g, s, H, w = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv
+    return {
+        f"{prefix}/norm": ParamSpec((L, d), (None, None), "ones"),
+        f"{prefix}/wz": ParamSpec((L, d, di), (None, "fsdp", "tp")),
+        f"{prefix}/wx": ParamSpec((L, d, di), (None, "fsdp", "tp")),
+        f"{prefix}/wB": ParamSpec((L, d, g * s), (None, "fsdp", None)),
+        f"{prefix}/wC": ParamSpec((L, d, g * s), (None, "fsdp", None)),
+        f"{prefix}/wdt": ParamSpec((L, d, H), (None, "fsdp", "tp")),
+        f"{prefix}/conv_x": ParamSpec((L, w, di), (None, None, "tp")),
+        f"{prefix}/conv_B": ParamSpec((L, w, g * s), (None, None, None)),
+        f"{prefix}/conv_C": ParamSpec((L, w, g * s), (None, None, None)),
+        f"{prefix}/A_log": ParamSpec((L, H), (None, "tp"), "ssm_a"),
+        f"{prefix}/D": ParamSpec((L, H), (None, "tp"), "ones"),
+        f"{prefix}/dt_bias": ParamSpec((L, H), (None, "tp"), "ssm_dt"),
+        f"{prefix}/gnorm": ParamSpec((L, di), (None, "tp"), "ones"),
+        f"{prefix}/wout": ParamSpec((L, di, d), (None, "tp", "fsdp")),
+    }
+
+
+def arch_layout(cfg: ArchConfig) -> dict:
+    V, d, L = cfg.padded_vocab, cfg.d_model, cfg.n_layers
+    out = {}
+    if not cfg.embed_inputs:
+        out["embed/w"] = ParamSpec((V, d), ("tp", "fsdp"))
+    if cfg.family in ("dense", "vlm"):
+        out.update(_attn("layers/attn", cfg, L))
+        out.update(_mlp("layers/mlp", cfg, L))
+    elif cfg.family == "moe":
+        out.update(_attn("layers/attn", cfg, L))
+        out.update(_moe("layers/moe", cfg, L))
+    elif cfg.family == "ssm":
+        out.update(_mamba("layers/mamba", cfg, L))
+    elif cfg.family == "hybrid":
+        out.update(_mamba("layers/mamba", cfg, L))
+        # single shared transformer block (Zamba2): params reused every
+        # shared_attn_period layers; doubled input is projected back to d.
+        out["shared/in_proj"] = ParamSpec((2 * d, d), ("fsdp", None))
+        out.update({k: ParamSpec(v.shape[1:], v.logical[1:], v.init)
+                    for k, v in _attn("shared/attn", cfg, 1).items()})
+        out.update({k: ParamSpec(v.shape[1:], v.logical[1:], v.init)
+                    for k, v in _mlp("shared/mlp", cfg, 1).items()})
+    elif cfg.family == "encdec":
+        Le, Ld = cfg.n_enc_layers, cfg.n_dec_layers
+        out["enc_pos/w"] = ParamSpec((cfg.enc_ctx, d), (None, "fsdp"))
+        out.update(_attn("enc_layers/attn", cfg, Le))
+        out.update(_mlp("enc_layers/mlp", cfg, Le))
+        out.update(_attn("dec_layers/self_attn", cfg, Ld))
+        out.update(_attn("dec_layers/cross_attn", cfg, Ld))
+        out.update(_mlp("dec_layers/mlp", cfg, Ld))
+        out["enc_final_norm"] = ParamSpec((d,), (None,), "ones")
+    else:
+        raise ValueError(cfg.family)
+    out["final_norm"] = ParamSpec((d,), (None,), "ones")
+    if not cfg.tie_embeddings:
+        out["lm_head/w"] = ParamSpec((d, V), ("fsdp", "tp"))
+    return out
+
+
+def _nest(flat: dict) -> dict:
+    tree: dict = {}
+    for path, v in flat.items():
+        node = tree
+        parts = path.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return tree
+
+
+def _init_one(key, spec: ParamSpec, dtype):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "ssm_a":   # A in [1, 16): A_log = log(uniform)
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(jnp.float32)
+    if spec.init == "ssm_dt":  # dt bias ~ softplus^-1(uniform(1e-3, 1e-1))
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1e-3, 1e-1)
+        return jnp.log(jnp.expm1(u)).astype(jnp.float32)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    w = jax.random.normal(key, spec.shape, jnp.float32) / math.sqrt(fan_in)
+    return w.astype(dtype)
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    layout = arch_layout(cfg)
+    keys = jax.random.split(key, len(layout))
+    flat = {p: _init_one(k, s, dtype)
+            for k, (p, s) in zip(keys, sorted(layout.items()))}
+    return _nest(flat)
+
+
+def abstract_params(cfg: ArchConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    flat = {}
+    for p, s in arch_layout(cfg).items():
+        dt = jnp.float32 if s.init in ("ssm_a", "ssm_dt") else dtype
+        flat[p] = jax.ShapeDtypeStruct(s.shape, dt)
+    return _nest(flat)
+
+
+def param_pspecs(cfg: ArchConfig, ctx) -> dict:
+    from jax.sharding import PartitionSpec
+    flat = {p: ctx.spec(*s.logical) for p, s in arch_layout(cfg).items()}
+    return _nest(flat)

@@ -1,0 +1,166 @@
+"""Mamba2 / SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Chunked SSD algorithm: within a chunk of Q timesteps the recurrence is
+evaluated as a masked attention-like matmul (MXU-friendly quadratic-in-Q);
+across chunks a tiny sequential scan propagates the (H, hd, n) state. This is
+the TPU-native formulation — all heavy ops are dense matmuls, the only
+sequential dependency is O(L/Q) long.
+
+Decode is the O(1) recurrent update on the persistent (B, H, hd, n) state plus
+a rolling causal-conv window.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rmsnorm
+from repro.parallel.sharding import shard
+
+
+def _segsum(a):
+    """a: (..., Q). Returns (..., Q, Q): sum_{j<i..} with -inf above diag."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(q)[:, None]
+    j = jnp.arange(q)[None, :]
+    return jnp.where(i >= j, diff, -jnp.inf)
+
+
+def causal_conv(x, w, cache=None):
+    """Depthwise causal conv. x: (B, L, C); w: (W, C); cache: (B, W-1, C)."""
+    width = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    new_cache = xp[:, -(width - 1):, :] if width > 1 else pad
+    return jax.nn.silu(out), new_cache
+
+
+def ssd_chunked(xh, dt, A_log, B, C, D, *, chunk: int, unroll=1):
+    """xh: (b,l,h,p); dt: (b,l,h); A_log: (h,); B/C: (b,l,g,n); D: (h,)."""
+    b, l, h, p = xh.shape
+    g, n = B.shape[2], B.shape[3]
+    assert l % chunk == 0, (l, chunk)
+    c = l // chunk
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2)        # (b,l,h,n)
+    Ch = jnp.repeat(C, rep, axis=2)
+
+    a = (-jnp.exp(A_log.astype(jnp.float32)))[None, None, :] * dt  # (b,l,h)
+    xdt = xh * dt[..., None].astype(xh.dtype)
+
+    def ck(t):  # chunk a (b,l,...) tensor to (b,c,Q,...)
+        return t.reshape((b, c, chunk) + t.shape[2:])
+
+    a_c = ck(a).transpose(0, 3, 1, 2)            # (b,h,c,Q)
+    a_cum = jnp.cumsum(a_c, axis=-1)             # (b,h,c,Q)
+    L = jnp.exp(_segsum(a_c))                    # (b,h,c,Q,Q)
+    x_c, B_c, C_c = ck(xdt), ck(Bh), ck(Ch)      # (b,c,Q,h,*)
+
+    # intra-chunk (quadratic in Q, MXU matmuls)
+    scores = jnp.einsum("bcqhn,bckhn->bhcqk", C_c, B_c,
+                        preferred_element_type=jnp.float32)
+    y_diag = jnp.einsum("bhcqk,bckhp->bcqhp", scores * L,
+                        x_c.astype(jnp.float32))
+
+    # chunk-final states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)         # (b,h,c,Q)
+    states = jnp.einsum("bckhn,bhck,bckhp->bchpn", B_c,
+                        decay_states, x_c.astype(jnp.float32))
+
+    # inter-chunk recurrence over c (sequential, tiny)
+    chunk_decay = jnp.exp(a_cum[..., -1])                   # (b,h,c)
+
+    def scan_fn(s_prev, inp):
+        dec, st = inp                                        # (b,h), (b,h,p,n)
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    s_last, s_prevs = jax.lax.scan(
+        scan_fn, s0,
+        (chunk_decay.transpose(2, 0, 1), states.transpose(1, 0, 2, 3, 4)),
+        unroll=unroll)
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)               # (b,c,h,p,n)
+
+    state_decay_out = jnp.exp(a_cum)                         # (b,h,c,Q)
+    y_off = jnp.einsum("bcqhn,bchpn,bhcq->bcqhp", C_c.astype(jnp.float32),
+                       s_prevs, state_decay_out)
+    y = (y_diag + y_off).reshape(b, l, h, p).astype(xh.dtype)
+    y = y + xh * D[None, None, :, None].astype(xh.dtype)
+    return y, s_last
+
+
+def mamba_block(x, p, cfg, ctx, cache=None):
+    """Pre-norm Mamba2 block. cache: dict(conv_x, conv_B, conv_C, state) for
+    decode (L dim stripped). Returns (y, new_cache_or_None)."""
+    b, l, d = x.shape
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    z = h @ p["wz"]                                  # (b,l,di)
+    xi = h @ p["wx"]                                 # (b,l,di)
+    Bp = h @ p["wB"]                                 # (b,l,g*n)
+    Cp = h @ p["wC"]
+    dt = jax.nn.softplus((h @ p["wdt"]).astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])      # (b,l,H)
+    xi = shard(xi, ctx, "dp", None, "tp")
+    z = shard(z, ctx, "dp", None, "tp")
+
+    cx = cache["conv_x"] if cache else None
+    cb = cache["conv_B"] if cache else None
+    cc = cache["conv_C"] if cache else None
+    xi, ncx = causal_conv(xi, p["conv_x"], cx)
+    Bp, ncb = causal_conv(Bp, p["conv_B"], cb)
+    Cp, ncc = causal_conv(Cp, p["conv_C"], cc)
+
+    H, hd = cfg.ssm_heads, cfg.ssm_head_dim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    xh = xi.reshape(b, l, H, hd)
+    Bm = Bp.reshape(b, l, g, n)
+    Cm = Cp.reshape(b, l, g, n)
+
+    if cache is None or l > 1:
+        # train or prefill: chunked scan (prefill assumes empty initial state,
+        # i.e. pos == 0); the final state seeds subsequent decode steps.
+        y, s_last = ssd_chunked(xh, dt, p["A_log"], Bm, Cm, p["D"],
+                                chunk=min(cfg.ssm_chunk, l),
+                                unroll=cfg.scan_unroll or 1)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"conv_x": ncx, "conv_B": ncb, "conv_C": ncc,
+                         "state": s_last}
+    else:
+        s_prev = cache["state"]                      # (b,H,hd,n) f32
+        rep = H // g
+        Bh = jnp.repeat(Bm[:, 0], rep, axis=1)       # (b,H,n)
+        Ch = jnp.repeat(Cm[:, 0], rep, axis=1)
+        a = -jnp.exp(p["A_log"].astype(jnp.float32)) * dt[:, 0]   # (b,H)
+        dA = jnp.exp(a)[..., None, None]
+        dx = (xh[:, 0] * dt[:, 0, :, None]).astype(jnp.float32)   # (b,H,hd)
+        s_new = s_prev * dA + dx[..., :, None] * Bh[:, :, None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", s_new, Ch.astype(jnp.float32))
+        y = y + xh[:, 0].astype(jnp.float32) * p["D"][None, :, None]
+        y = y[:, None].astype(x.dtype)               # (b,1,H,hd)
+        new_cache = {"conv_x": ncx, "conv_B": ncb, "conv_C": ncc,
+                     "state": s_new}
+
+    y = y.reshape(b, l, cfg.d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["gnorm"], cfg.norm_eps)
+    out = x + y @ p["wout"]
+    return out, new_cache
+
+
+def init_ssm_cache(cfg, batch, dtype):
+    w = cfg.ssm_conv
+    return {
+        "conv_x": jnp.zeros((batch, w - 1, cfg.d_inner), dtype),
+        "conv_B": jnp.zeros((batch, w - 1, cfg.ssm_groups * cfg.ssm_state), dtype),
+        "conv_C": jnp.zeros((batch, w - 1, cfg.ssm_groups * cfg.ssm_state), dtype),
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                            cfg.ssm_state), jnp.float32),
+    }

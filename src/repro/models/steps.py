@@ -1,0 +1,76 @@
+"""Step functions: train_step / prefill_step / serve_step factories.
+
+These are what the launcher jits (and the dry-run lowers): pure functions of
+(params, opt_state, batch) / (params, cache, tokens, pos) with all sharding
+expressed via in_shardings + internal logical constraints.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.lm import forward, init_cache, lm_loss
+from repro.optim import clip_by_global_norm
+
+
+MOE_AUX_WEIGHT = 0.01
+
+
+def batch_inputs(batch, cfg: ArchConfig):
+    if cfg.family == "encdec":
+        return {"enc": batch["enc"], "tokens": batch["tokens"]}
+    if cfg.embed_inputs:
+        return batch["embeds"]
+    return batch["tokens"]
+
+
+def make_train_step(cfg: ArchConfig, ctx, optimizer, lr_schedule,
+                    max_grad_norm: float = 1.0):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            logits, aux, _ = forward(p, batch_inputs(batch, cfg), cfg, ctx)
+            loss = lm_loss(logits, batch["labels"], cfg)
+            if cfg.family == "moe" and "router_mean_prob" in aux:
+                # load-balance proxy: E * sum(mean_prob^2) per layer
+                mp = aux["router_mean_prob"]
+                aux_loss = cfg.n_experts * jnp.sum(mp * mp, axis=-1).mean()
+                loss = loss + MOE_AUX_WEIGHT * aux_loss
+            return loss, aux
+
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        lr = lr_schedule(opt_state["count"])
+        new_params, new_state = optimizer.update(grads, opt_state, params, lr)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        if cfg.family == "moe" and "dropped" in aux:
+            metrics["moe_dropped"] = jnp.sum(aux["dropped"])
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, ctx, max_seq: int):
+    def prefill_step(params, batch):
+        inputs = batch_inputs(batch, cfg)
+        b = (inputs["tokens"] if isinstance(inputs, dict) else inputs).shape[0]
+        cache = init_cache(cfg, b, max_seq, ctx)
+        if cfg.family == "encdec":
+            cache.pop("enc_out")  # placeholder — prefill computes the encoder
+        logits, _, cache = forward(params, inputs, cfg, ctx, cache=cache,
+                                   pos=0)
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, ctx):
+    def serve_step(params, cache, tokens, pos):
+        """tokens: (B, 1) int32 (or (B,1,d) embeds for vlm); pos: scalar."""
+        logits, _, new_cache = forward(params, tokens, cfg, ctx, cache=cache,
+                                       pos=pos)
+        return logits[:, -1], new_cache
+
+    return serve_step

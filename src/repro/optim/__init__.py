@@ -1,0 +1,10 @@
+from repro.optim.optimizers import (Optimizer, adafactor, adamw,
+                                    make_optimizer)
+from repro.optim.schedule import cosine_schedule
+from repro.optim.clip import clip_by_global_norm, global_norm
+from repro.optim.compress import (CompressorState, error_feedback_int8,
+                                  init_compressor)
+
+__all__ = ["Optimizer", "adamw", "adafactor", "make_optimizer",
+           "cosine_schedule", "clip_by_global_norm", "global_norm",
+           "CompressorState", "error_feedback_int8", "init_compressor"]

@@ -1,0 +1,65 @@
+"""Error-feedback gradient compression (distributed-optimization trick).
+
+int8 per-tensor-scaled quantization with an error-feedback accumulator: the
+quantization residual is carried into the next step, so compression bias
+vanishes asymptotically (Karimireddy et al., "Error Feedback Fixes SignSGD").
+On hardware this halves/quarters DP all-reduce bytes when applied before the
+gradient reduction (reduce in int8, dequantize after); under single-program
+GSPMD we apply it at the optimizer boundary, which models the same numerics
+and is what the compression tests validate. top-k sparsification is provided
+for the async/elastic path (ship only the largest entries + error feedback).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressorState(NamedTuple):
+    error: dict   # same pytree as grads, f32 residuals
+
+
+def init_compressor(params) -> CompressorState:
+    return CompressorState(
+        error=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def _quant_dequant_int8(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def error_feedback_int8(grads, state: CompressorState):
+    """Returns (compressed grads, new state). Residual carried to next step."""
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        gq = _quant_dequant_int8(gf)
+        return gq.astype(g.dtype), gf - gq
+
+    td = jax.tree.structure(grads)
+    pairs = [one(g, e) for g, e in zip(jax.tree.leaves(grads),
+                                       jax.tree.leaves(state.error))]
+    new_g = jax.tree.unflatten(td, [p[0] for p in pairs])
+    new_e = jax.tree.unflatten(td, [p[1] for p in pairs])
+    return new_g, CompressorState(error=new_e)
+
+
+def topk_sparsify(grads, state: CompressorState, frac: float = 0.01):
+    """Keep the largest `frac` entries (by magnitude) + error feedback."""
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        flat = gf.reshape(-1)
+        k = max(1, int(flat.shape[0] * frac))
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        kept = jnp.where(jnp.abs(gf) >= thresh, gf, 0.0)
+        return kept.astype(g.dtype), gf - kept
+
+    td = jax.tree.structure(grads)
+    pairs = [one(g, e) for g, e in zip(jax.tree.leaves(grads),
+                                       jax.tree.leaves(state.error))]
+    new_g = jax.tree.unflatten(td, [p[0] for p in pairs])
+    new_e = jax.tree.unflatten(td, [p[1] for p in pairs])
+    return new_g, CompressorState(error=new_e)

@@ -1,0 +1,139 @@
+"""Optimizers: AdamW and Adafactor, as (init, update) pure-function pairs.
+
+State dtype policy: AdamW moments default to float32; `moment_dtype=bfloat16`
+halves optimizer HBM (used selectively at the 1T scale). Adafactor keeps a
+factored second moment (row+col vectors) — the memory-viable choice for
+kimi-k2-class parameter counts (DESIGN.md Section 5) — plus a bf16 first
+moment. Optimizer states inherit each parameter's sharding (same pytree
+structure => derived pspecs), so ZeRO follows from the param layout for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable                 # params -> state
+    update: Callable               # (grads, state, params, lr) -> (params, state)
+    state_pspecs: Callable         # param_pspecs -> state pspecs
+
+
+def _map_params(fn, ref_tree, *trees):
+    """Map fn over the leaves of ref_tree; extra trees may carry dict-valued
+    'leaves' at the same positions (flatten_up_to keeps them intact)."""
+    leaves, treedef = jax.tree.flatten(ref_tree)
+    others = [treedef.flatten_up_to(t) for t in trees]
+    outs = [fn(*args) for args in zip(leaves, *others)]
+    return treedef, outs
+
+
+def _unzip(treedef, outs, i):
+    return jax.tree.unflatten(treedef, [o[i] for o in outs])
+
+
+def adamw(b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          moment_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        c = state["count"] + 1
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            step = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr * step
+            return (p_new.astype(p.dtype), m_new.astype(moment_dtype),
+                    v_new.astype(moment_dtype))
+
+        td, outs = _map_params(upd, grads, state["m"], state["v"], params)
+        return _unzip(td, outs, 0), {"m": _unzip(td, outs, 1),
+                                     "v": _unzip(td, outs, 2), "count": c}
+
+    def state_pspecs(pspecs):
+        return {"m": pspecs, "v": pspecs, "count": P()}
+
+    return Optimizer(init, update, state_pspecs)
+
+
+def adafactor(decay=0.99, eps=1e-30, clip_threshold=1.0, weight_decay=0.0,
+              momentum_dtype=jnp.bfloat16) -> Optimizer:
+    """Factored second moment for >=2D params; full vector for 1D."""
+    def _factored(shape):
+        return len(shape) >= 2
+
+    def init(params):
+        def v_init(p):
+            if _factored(p.shape):
+                return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"m": jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, momentum_dtype), params),
+                "v": jax.tree.map(v_init, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        c = state["count"] + 1
+
+        def upd(g, m, vf, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if _factored(p.shape):
+                r = decay * vf["r"] + (1 - decay) * g2.mean(axis=-1)
+                col = decay * vf["c"] + (1 - decay) * g2.mean(axis=-2)
+                rc = r / jnp.maximum(r.mean(axis=-1, keepdims=True), eps)
+                vhat = rc[..., None] * col[..., None, :]
+                new_v = {"r": r, "c": col}
+            else:
+                v = decay * vf["v"] + (1 - decay) * g2
+                vhat = v
+                new_v = {"v": v}
+            u = gf * jax.lax.rsqrt(vhat + eps)
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            m_new = 0.9 * m.astype(jnp.float32) + 0.1 * u
+            p_new = (p.astype(jnp.float32)
+                     - lr * (m_new + weight_decay * p.astype(jnp.float32)))
+            return (p_new.astype(p.dtype), m_new.astype(momentum_dtype), new_v)
+
+        td, outs = _map_params(upd, grads, state["m"], state["v"], params)
+        return _unzip(td, outs, 0), {"m": _unzip(td, outs, 1),
+                                     "v": _unzip(td, outs, 2), "count": c}
+
+    def state_pspecs(pspecs):
+        def v_spec(ps):
+            parts = tuple(ps) if ps is not None else ()
+            if len(parts) >= 2:
+                return {"r": P(*parts[:-1]), "c": P(*(parts[:-2] + parts[-1:]))}
+            return {"v": P(*parts) if parts else P()}
+
+        leaves, td = jax.tree.flatten(
+            pspecs, is_leaf=lambda x: isinstance(x, P) or x is None)
+        return {"m": pspecs,
+                "v": jax.tree.unflatten(td, [v_spec(l) for l in leaves]),
+                "count": P()}
+
+    return Optimizer(init, update, state_pspecs)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    raise ValueError(name)

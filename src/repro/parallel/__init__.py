@@ -1,0 +1,4 @@
+from repro.parallel.ctx import ParallelCtx, local_ctx
+from repro.parallel.sharding import logical_spec, shard
+
+__all__ = ["ParallelCtx", "local_ctx", "logical_spec", "shard"]

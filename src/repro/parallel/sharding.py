@@ -1,0 +1,21 @@
+"""Sharding-constraint helpers for model code."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def logical_spec(ctx, *names) -> P:
+    return ctx.spec(*names) if ctx is not None else P()
+
+
+def shard(x, ctx, *names):
+    """with_sharding_constraint through the ctx's logical rules (no-op if the
+    resolved spec is fully replicated or ctx is a 1-device local ctx)."""
+    if ctx is None or ctx.tp_axis is None and not ctx.dp_axes:
+        return x
+    spec = ctx.spec(*names)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))

@@ -1,0 +1,3 @@
+from repro.runtime.ft import StepTimer, TrainSupervisor
+
+__all__ = ["StepTimer", "TrainSupervisor"]

@@ -1,0 +1,102 @@
+"""Fault tolerance: restart supervision, straggler detection, elastic remesh.
+
+TrainSupervisor wraps a train loop in checkpoint/restart semantics: on any
+step exception the loop restarts from the latest atomically-committed
+checkpoint (up to max_restarts). On a real cluster the same supervisor runs
+per-controller and a failed host simply rejoins after requeue — the restore
+path re-shards the logical checkpoint onto whatever mesh exists at restart
+(elastic scaling: N-chip save -> M-chip restore).
+
+StepTimer keeps an EWMA of step wall time and flags stragglers (steps slower
+than `threshold` x the EWMA) — at the data layer, HSS itself is the
+mitigation: globally balanced partitions mean no shard is a long pole in the
+exchange, and iterative re-splitting (warm-started splitters) adapts to
+drifting key distributions between steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+from repro.ckpt import latest_step, restore, save
+
+
+@dataclasses.dataclass
+class StepTimer:
+    alpha: float = 0.1
+    threshold: float = 2.0
+    ewma: float = 0.0
+    stragglers: int = 0
+    steps: int = 0
+
+    def record(self, dt: float) -> bool:
+        """Returns True if this step was a straggler."""
+        self.steps += 1
+        if self.ewma == 0.0:
+            self.ewma = dt
+            return False
+        slow = dt > self.threshold * self.ewma
+        self.stragglers += int(slow)
+        self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return slow
+
+
+class TrainSupervisor:
+    def __init__(self, ckpt_dir: str, *, save_every: int = 100,
+                 max_restarts: int = 3, keep: int = 3, async_save: bool = True):
+        self.ckpt_dir = ckpt_dir
+        self.save_every = save_every
+        self.max_restarts = max_restarts
+        self.keep = keep
+        self.timer = StepTimer()
+        if async_save:
+            from repro.ckpt import AsyncCheckpointer
+            self._ckpt = AsyncCheckpointer(ckpt_dir, keep=keep)
+        else:
+            self._ckpt = None
+        self.restarts = 0
+
+    def _save(self, step, state, extra):
+        if self._ckpt is not None:
+            self._ckpt.save(step, state, extra)
+        else:
+            save(self.ckpt_dir, step, state, extra=extra, keep=self.keep)
+
+    def resume_or_init(self, init_state):
+        """Restore the latest checkpoint into init_state's structure, or
+        return (0, init_state) for a cold start."""
+        step = latest_step(self.ckpt_dir)
+        if step is None:
+            return 0, init_state
+        state, extra = restore(self.ckpt_dir, step, init_state)
+        return extra.get("next_step", step), state
+
+    def run(self, init_state, total_steps: int, step_fn: Callable,
+            *, on_metrics: Callable | None = None):
+        """step_fn(step, state) -> (state, metrics). Restarts on exception."""
+        while True:
+            start, state = self.resume_or_init(init_state)
+            try:
+                for step in range(start, total_steps):
+                    t0 = time.monotonic()
+                    state, metrics = step_fn(step, state)
+                    slow = self.timer.record(time.monotonic() - t0)
+                    if on_metrics:
+                        on_metrics(step, metrics, slow)
+                    if (step + 1) % self.save_every == 0 or \
+                            step + 1 == total_steps:
+                        self._save(step + 1, state,
+                                   {"next_step": step + 1})
+                if self._ckpt is not None:
+                    self._ckpt.wait()
+                return state
+            except KeyboardInterrupt:
+                raise
+            except Exception:
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise
+                if self._ckpt is not None:
+                    self._ckpt.wait()
+                # fall through: restore from the latest good checkpoint

@@ -1,0 +1,14 @@
+"""Test fixtures. Multi-device shard_map tests need >1 host device, so we ask
+XLA for 8 *before* jax initializes. This is deliberately 8 (not the dry-run's
+512): the dry-run sets its own count in its own process (launch/dryrun.py)."""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

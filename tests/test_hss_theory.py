@@ -1,0 +1,108 @@
+"""Validation of the paper's analytical claims via the logical-p simulator."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import auto_rounds
+from repro.core import simulator as sim
+
+
+@pytest.mark.parametrize("p", [256, 1024, 4096])
+def test_rounds_match_table4_bound(p):
+    """Paper Table 4: with F = 5p per round and eps = 0.02, observed rounds 4,
+    bound ceil(ln(2 ln p / eps) / ln(f/2)) = 8 for p in 4K..32K."""
+    r = sim.simulate_hss(p, 4096, eps=0.02, sample_per_round=5 * p, seed=1)
+    assert r.all_satisfied
+    f = 5.0
+    bound = math.ceil(math.log(2 * math.log(p) / 0.02) / math.log(f / 2.0))
+    assert r.rounds_used <= bound
+    assert r.rounds_used <= 6  # paper observes 4
+
+
+def test_rounds_grow_very_slowly_with_p():
+    rounds = [sim.simulate_hss(p, 2048, eps=0.02, sample_per_round=5 * p,
+                               seed=2).rounds_used
+              for p in (512, 2048, 8192, 32768)]
+    assert max(rounds) - min(rounds) <= 2  # O(log log p / eps) growth
+
+
+def test_gamma_geometric_decay():
+    """Lemma 4.5: |gamma_j| <= 4N/s_j shrinks geometrically."""
+    p = 1024
+    r = sim.simulate_hss(p, 4096, eps=0.02, sample_per_round=5 * p, seed=3)
+    g = r.gamma_sizes
+    for a, b in zip(g, g[1:]):
+        if b == 0:
+            break
+        assert b < a * 0.6  # decay factor f/2 = 2.5 expected; allow slack
+
+
+def test_sample_size_per_round_constant():
+    """Theorem 4.8: O(p) sample per round regardless of round index."""
+    p = 2048
+    r = sim.simulate_hss(p, 4096, eps=0.02, sample_per_round=5 * p, seed=4)
+    for s in r.sample_sizes:
+        assert s <= 8 * p
+
+
+def test_balance_achieved_for_eps_grid():
+    for eps in (0.01, 0.05, 0.2):
+        r = sim.simulate_hss(512, 8192, eps=eps, sample_per_round=5 * 512,
+                             seed=5)
+        assert r.all_satisfied
+        assert r.achieved_eps <= eps + 1e-9
+        assert r.max_load_frac <= 1 + eps
+
+
+def test_theory_schedule_terminates_in_k_rounds():
+    """Theorem 4.7 fixed-ratio schedule: k rounds suffice."""
+    p, eps = 1024, 0.05
+    for k in (1, 2, 3):
+        r = sim.simulate_hss(p, 8192, eps=eps, rounds=k, adaptive=False, seed=6)
+        assert r.all_satisfied, f"k={k}"
+        assert r.rounds_used <= k
+
+
+def test_one_round_needs_theta_p_log_p_over_eps():
+    """Theorem 4.2 (and Fig 2): one-round HSS ~ p log p / eps samples; the
+    multi-round version needs far fewer in total."""
+    p, eps = 1024, 0.05
+    one = sim.simulate_hss(p, 4096, eps=eps, rounds=1, adaptive=False, seed=7)
+    multi = sim.simulate_hss(p, 4096, eps=eps, sample_per_round=5 * p, seed=7)
+    assert one.all_satisfied and multi.all_satisfied
+    assert one.total_sample > 3 * multi.total_sample
+
+
+def test_auto_rounds_formula():
+    assert auto_rounds(1024, 0.05) == round(math.log(2 * math.log(1024) / 0.05))
+    assert auto_rounds(2, 0.5) >= 1
+
+
+def test_sample_sort_needs_more_than_hss():
+    """Figure 2's ordering: random sample sort >> AMS > HSS (total samples)."""
+    p, eps, npp = 256, 0.05, 2048
+    n = p * npp
+    hss_total = sim.simulate_hss(p, npp, eps=eps, sample_per_round=5 * p,
+                                 seed=8).total_sample
+
+    def ss(s, seed):
+        return sim.simulate_sample_sort_random(p, npp, s, seed) - 1.0
+
+    # sample sort needs Theta(p log N / eps^2) — search all the way up to N
+    ss_min = sim.min_sample_for_balance(ss, eps, p, n, trials=3, seed=0)
+    assert ss_min == -1 or ss_min > 4 * hss_total
+
+    def ams(s, seed):
+        ok, frac = sim.simulate_ams(p, npp, eps, s, seed)
+        return frac - 1.0 if ok else float("inf")
+
+    ams_min = sim.min_sample_for_balance(ams, eps, p, n, trials=3, seed=0)
+    assert ams_min > hss_total  # multi-round HSS beats AMS (paper Sec 3.6)
+
+
+def test_regular_sampling_deterministic_balance():
+    """Theorem 3.2: s = p/eps gives (1+eps) deterministically."""
+    p, eps = 64, 0.1
+    frac = sim.simulate_sample_sort_regular(p, 4096, s=int(p / eps))
+    assert frac <= 1 + eps + 0.01

@@ -1,0 +1,104 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.bitonic_sort import ops as bops
+from repro.kernels.bitonic_sort import ref as bref
+from repro.kernels.histogram import ops as hops
+from repro.kernels.histogram import ref as href
+
+
+def _keys(rng, n, dtype):
+    if np.issubdtype(dtype, np.floating):
+        return (rng.standard_normal(n) * 1e3).astype(dtype)
+    return rng.integers(-2 ** 28, 2 ** 28, size=n).astype(dtype)
+
+
+# ---------------------------------------------------------------- bitonic
+@pytest.mark.parametrize("dtype", [np.float32, np.int32, np.uint32])
+@pytest.mark.parametrize("block", [64, 256, 1024])
+def test_block_sort_matches_ref(rng, dtype, block):
+    n = 4 * block
+    x = jnp.asarray(_keys(rng, n, dtype))
+    got = bops.block_sort(x, block=block, interpret=True)
+    want = bref.block_sort_ref(x, block)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("run", [64, 512])
+def test_merge_pass_matches_ref(rng, run):
+    n = 8 * run
+    x = _keys(rng, n, np.float32)
+    x = np.sort(x.reshape(-1, run), axis=1).reshape(-1)  # sorted runs
+    got = bops.merge_pass(jnp.asarray(x), run=run, interpret=True)
+    want = bref.merge_pass_ref(jnp.asarray(x), run)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+@pytest.mark.parametrize("n", [1, 7, 64, 1000, 4096, 5000])
+def test_local_sort_any_length(rng, dtype, n):
+    x = jnp.asarray(_keys(rng, n, dtype))
+    got = bops.local_sort(x, block=64, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.sort(np.asarray(x)))
+
+
+def test_local_sort_with_duplicates(rng):
+    x = jnp.asarray(rng.integers(0, 8, size=2048).astype(np.int32))
+    got = bops.local_sort(x, block=256, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.sort(np.asarray(x)))
+
+
+def test_local_sort_hits_jnp_fallback(rng):
+    """Runs > MAX_RUN finish with the documented XLA fallback path."""
+    import repro.kernels.bitonic_sort.ops as mod
+    old = mod.MAX_RUN
+    try:
+        mod.MAX_RUN = 128
+        x = jnp.asarray(_keys(rng, 1024, np.float32))
+        got = mod.local_sort.__wrapped__(x, block=64, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.sort(np.asarray(x)))
+    finally:
+        mod.MAX_RUN = old
+
+
+# ---------------------------------------------------------------- histogram
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+@pytest.mark.parametrize("n,m", [(512, 16), (2048, 128), (1000, 37), (4096, 512)])
+def test_probe_ranks_matches_ref(rng, dtype, n, m):
+    keys = jnp.asarray(_keys(rng, n, dtype))
+    probes = jnp.sort(jnp.asarray(_keys(rng, m, dtype)))
+    got = hops.probe_ranks(keys, probes, tile=256, interpret=True)
+    want = href.probe_ranks_ref(keys, probes)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_probe_ranks_unsorted_keys_ok(rng):
+    keys = jnp.asarray(_keys(rng, 1024, np.int32))  # NOT sorted
+    probes = jnp.sort(keys[::17][:32])
+    got = hops.probe_ranks(keys, probes, tile=128, interpret=True)
+    want = href.probe_ranks_ref(keys, probes)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_probe_counts_matches_ref(rng):
+    keys = jnp.asarray(_keys(rng, 2048, np.float32))
+    probes = jnp.sort(jnp.asarray(_keys(rng, 64, np.float32)))
+    got = hops.probe_counts(keys, probes, tile=256, interpret=True)
+    want = href.probe_counts_ref(keys, probes)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert int(np.asarray(got).sum()) == 2048
+
+
+# ------------------------------------------------- kernel/HSS integration
+def test_hss_sort_with_bitonic_local_sort(rng):
+    from repro.core import HSSConfig, gather_sorted, hss_sort
+    n = 8 * 1024
+    x = rng.permutation(n).astype(np.int32)
+    res = hss_sort(jnp.asarray(x), hss_cfg=HSSConfig(eps=0.05),
+                   local_sort_fn=lambda v: bops.local_sort(v, interpret=True))
+    g = gather_sorted(res)
+    np.testing.assert_array_equal(np.sort(g), np.sort(x))
+    assert np.all(np.diff(g.astype(np.int64)) >= 0)
