@@ -13,6 +13,7 @@ from benchmarks.common import timeit
 from repro.core import HSSConfig
 from repro.core.splitters import hss_splitters
 from repro.core import simulator as sim
+from repro.parallel.compat import shard_map
 
 
 def _splitter_time(p: int, n_per: int, eps: float) -> float:
@@ -29,9 +30,8 @@ def _splitter_time(p: int, n_per: int, eps: float) -> float:
             local, axis_name="sort", p=p, cfg=HSSConfig(eps=eps), rng=r)
         return keys
 
-    f = jax.jit(jax.shard_map(per_shard, mesh=mesh,
-                              in_specs=(P("sort"), P()), out_specs=P(),
-                              check_vma=False))
+    f = jax.jit(shard_map(per_shard, mesh=mesh,
+                          in_specs=(P("sort"), P()), out_specs=P()))
     import jax.random as jr
     key = jr.key(0)
     return timeit(lambda: f(xs, key))

@@ -24,63 +24,46 @@ from jax.sharding import PartitionSpec as P
 
 import sys
 sys.path.insert(0, "src")
-from repro.core import HSSConfig
-from repro.core.splitters import hss_splitters
-from repro.core.sample_sort import random_sample_splitters
-from repro.core.ams import ams_sort_sharded, ams_sample_size
 from repro.launch.dryrun import collective_bytes
+from repro.parallel.compat import shard_map
+from repro.sort import ShardCtx, SortSpec, get_partitioner
 
 P_SHARDS = 256
 N_LOCAL = 1 << 20   # 1M keys/shard => N = 268M
 mesh = jax.make_mesh((P_SHARDS,), ("sort",), devices=jax.devices()[:P_SHARDS])
 
 def lower_bytes(per_shard):
-    f = jax.jit(jax.shard_map(per_shard, mesh=mesh,
-                              in_specs=(P("sort"), P()), out_specs=P(),
-                              check_vma=False))
+    f = jax.jit(shard_map(per_shard, mesh=mesh,
+                          in_specs=(P("sort"), P()), out_specs=P()))
     xs = jax.ShapeDtypeStruct((P_SHARDS, N_LOCAL), jnp.int32)
     key = jax.ShapeDtypeStruct((), jax.random.key(0).dtype)
     txt = f.lower(xs, jr.key(0)).compile().as_text()
     return collective_bytes(txt)
 
-def hss_shard(block, key):
-    local = block.reshape(-1)
-    rng = jr.fold_in(key, jax.lax.axis_index("sort"))
-    keys, _, _ = hss_splitters(local, axis_name="sort", p=P_SHARDS,
-                               cfg=HSSConfig(eps=0.05), rng=rng)
-    return keys
+def splitter_shard(algorithm, **spec_kw):
+    # splitter determination only, through the partitioner registry —
+    # the exact strategy objects the sort() front-door runs
+    part = get_partitioner(algorithm)
+    spec = SortSpec(algorithm=algorithm, eps=0.05, **spec_kw)
+    def per_shard(block, key):
+        local = jnp.sort(block.reshape(-1))
+        rng = jr.fold_in(key, jax.lax.axis_index("sort"))
+        ctx = ShardCtx(spec=spec, axis_names=("sort",), sizes=(P_SHARDS,),
+                       rng=rng)
+        keys, _, _, _ = part.splitters(local, ctx)
+        return keys
+    return per_shard
 
-def ss_shard(block, key):
-    local = jnp.sort(block.reshape(-1))
-    rng = jr.fold_in(key, jax.lax.axis_index("sort"))
-    # Theorem 3.1 sample size for eps=0.05
-    total = int(2 * P_SHARDS * 28 / 0.05 ** 2)  # 2 p log2(N) / eps^2
-    keys, _ = random_sample_splitters(local, axis_name="sort", p=P_SHARDS,
-                                      total_sample=total, rng=rng)
-    return keys
-
-def ams_shard(block, key):
-    local = block.reshape(-1)
-    rng = jr.fold_in(key, jax.lax.axis_index("sort"))
-    n = N_LOCAL * P_SHARDS
-    # Lemma A.1 sample; splitter determination only (exchange excluded)
-    from repro.core.ams import scanning_splitters
-    from repro.core.common import hi_sentinel, round_up
-    total = ams_sample_size(P_SHARDS, 0.05, n)
-    cap = round_up(max(8, int(3.0 * total / P_SHARDS)), 8)
-    ls = jnp.sort(local)
-    u = jr.uniform(rng, (N_LOCAL,))
-    mask = u < total / n
-    vals = jnp.sort(jnp.where(mask, ls, hi_sentinel(ls.dtype)))[:cap]
-    probes = jnp.sort(jax.lax.all_gather(vals, "sort", tiled=True))
-    ranks = jax.lax.psum(
-        jnp.searchsorted(ls, probes, side="left").astype(jnp.int32), "sort")
-    keys, _, ok = scanning_splitters(probes, ranks, p=P_SHARDS, n=n, eps=0.05)
-    return keys
+hss_shard = splitter_shard("hss")
+# Theorem 3.1 sample size for eps=0.05: 2 p log2(N) / eps^2
+ss_shard = splitter_shard("sample_random",
+                          total_sample=int(2 * P_SHARDS * 28 / 0.05 ** 2))
+ams_shard = splitter_shard("ams")   # Lemma A.1 sample (registry default)
 
 def two_stage_shard():
     # 16x16 two-stage splitter determination (paper Table 3 / Sec 6.1):
     # stage-1 16 groups + stage-2 within-group, measured on the 2-D mesh
+    from repro.core.common import HSSConfig
     from repro.core.multistage import hss_splitters_general
     mesh2 = jax.make_mesh((16, 16), ("outer", "inner"),
                           devices=jax.devices()[:256])
@@ -95,9 +78,9 @@ def two_stage_shard():
             local, axis_names="inner", num_shards=16, num_parts=16,
             cfg=HSSConfig(eps=0.05), rng=jr.fold_in(rng, 1))
         return g, s
-    f = jax.jit(jax.shard_map(body, mesh=mesh2,
-                              in_specs=(P("outer", "inner"), P()),
-                              out_specs=(P(), P()), check_vma=False))
+    f = jax.jit(shard_map(body, mesh=mesh2,
+                          in_specs=(P("outer", "inner"), P()),
+                          out_specs=(P(), P())))
     xs = jax.ShapeDtypeStruct((16, 16, N_LOCAL), jnp.int32)
     key = jax.ShapeDtypeStruct((), jax.random.key(0).dtype)
     txt = f.lower(xs, jr.key(0)).compile().as_text()

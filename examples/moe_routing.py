@@ -4,8 +4,9 @@ Token->expert dispatch is the paper's partitioning problem (DESIGN.md Sec. 4):
 N tokens must be split across expert shards under a static (1+eps) capacity.
 This example routes a batch through the shard_map a2a dispatch at several
 capacity factors and shows the drop/balance trade-off, then demonstrates the
-pure-sort view: balanced re-partitioning of (expert_id, token) keys with
-hss_sort + implicit tagging.
+pure-sort view: balanced re-partitioning of (expert_id, token) keys through
+the `repro.sort` front-door (implicit tagging is automatic for the
+duplicate-heavy expert ids; the returned indices ARE the token routing).
 
     PYTHONPATH=src python examples/moe_routing.py
 """
@@ -20,10 +21,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import smoke_config
-from repro.core import ExchangeConfig, HSSConfig, hss_sort
-from repro.core.tagging import pack_tagged
 from repro.models.moe import moe_ffn
 from repro.parallel.ctx import ParallelCtx
+from repro.sort import SortSpec, sort
 
 p = min(8, len(jax.devices()))
 mesh = jax.make_mesh((1, p), ("data", "model"))
@@ -50,17 +50,14 @@ for cf in (1.0, 1.5, 3.0):
           f"of {tokens} assignments")
 
 print("== pure-sort view: HSS over (expert_id, token) keys ==")
-# expert assignment keys duplicate heavily (E distinct values) -> tagging
+# expert assignment keys duplicate heavily (E distinct values); the adapter
+# layer tags them automatically and returns the token indices per shard
 logits = np.asarray(x).reshape(-1, d) @ np.asarray(params["router"])
 eids = np.argsort(-logits, axis=-1)[:, :cfg.top_k].reshape(-1).astype(np.int32)
 n = eids.size
-n_local = n // p
-tagged = np.concatenate([
-    np.asarray(pack_tagged(jnp.asarray(eids[i * n_local:(i + 1) * n_local]),
-                           i, p=p, n_local=n_local, key_bits=4))
-    for i in range(p)])
-res = hss_sort(jnp.asarray(tagged), hss_cfg=HSSConfig(eps=0.05),
-               ex_cfg=ExchangeConfig(strategy="allgather"))
+res = sort(jnp.asarray(eids),
+           SortSpec(eps=0.05, exchange="allgather", stable=True))
 print(f"  tokens per shard after HSS partition: {np.asarray(res.counts)}")
 print(f"  (1+eps) cap: {(1 + 0.05) * n / p:.0f}; overflow={int(res.overflow)}"
       f"; rounds={int(res.stats.rounds_used)}")
+print(f"  routed token ids, shard 0 head: {np.asarray(res.indices[0, :6])}")

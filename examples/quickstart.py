@@ -9,20 +9,27 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import HSSConfig, gather_sorted, hss_sort
+from repro.sort import SortSpec, sort
 
-# 1M keys, any numeric dtype, arbitrary distribution
+# 1M keys, any numeric dtype (floats included), arbitrary distribution
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.permutation(1 << 20).astype(np.int32))
 
-result = hss_sort(x, hss_cfg=HSSConfig(eps=0.05))
+result = sort(x, SortSpec(algorithm="hss", eps=0.05))
 
-out = gather_sorted(result)
+out = result.gather()
 assert np.array_equal(np.sort(np.asarray(x)), out)
-print(f"sorted {x.size} keys across {result.shards.shape[0]} shards")
+p = result.shards.shape[0]
+print(f"sorted {x.size} keys across {p} shards")
 print(f"  histogram rounds used : {int(result.stats.rounds_used)}")
 print(f"  samples per round     : {np.asarray(result.stats.sample_count)}")
 print(f"  gamma (interval union): {np.asarray(result.stats.gamma_size)}")
 print(f"  per-shard loads       : {np.asarray(result.counts)}  "
-      f"(cap {(1 + 0.05) * x.size / result.shards.shape[0]:.0f})")
+      f"(cap {(1 + 0.05) * x.size / p:.0f})")
 print(f"  exchange overflow     : {int(result.overflow)} (0 == exact)")
+
+# same input through a baseline partitioner: one spec knob, same surface
+baseline = sort(x, SortSpec(algorithm="sample_regular", eps=0.2,
+                            out_slack=1.3))
+assert np.array_equal(baseline.gather(), out)
+print(f"sample_regular agrees; loads {np.asarray(baseline.counts)}")

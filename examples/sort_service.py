@@ -1,7 +1,7 @@
 """Serve a small model with batched requests + the sorting service together:
 a decode loop (mamba2-family, O(1) state) whose per-step request batching is
 managed by HSS length bucketing — the paper's partitioning running inside a
-serving system.
+serving system, all through the `repro.sort` front-door.
 
     PYTHONPATH=src python examples/sort_service.py
 """
@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.configs import smoke_config
 from repro.data.partition import bucket_lengths
-from repro.launch.serve import serve_batch
+from repro.launch.serve import serve_bucketed
 
 print("== HSS request bucketing ==")
 rng = np.random.default_rng(0)
@@ -24,10 +24,13 @@ for i, s in enumerate(shards):
           f"[{req_lens[s].min() if s.size else 0}, "
           f"{req_lens[s].max() if s.size else 0}]")
 
-print("== batched decode (mamba2-family smoke model) ==")
+print("== bucketed decode (mamba2-family smoke model) ==")
 cfg = smoke_config("mamba2-370m")
-toks, stats = serve_batch(cfg, batch=4, prompt_len=24, gen=12)
-print(f"  generated: {toks.shape} tokens")
-print(f"  prefill {stats['prefill_s']*1e3:.1f} ms, "
-      f"decode {stats['decode_s']*1e3:.1f} ms "
-      f"({stats['tok_per_s']:.1f} tok/s on CPU)")
+lens = rng.lognormal(3.0, 0.4, size=16).clip(8, 48).astype(np.int32)
+results, totals = serve_bucketed(cfg, prompt_lens=lens, gen=8, n_buckets=2)
+for ids, stats in results:
+    print(f"  bucket of {ids.size:2d} reqs, prompt pad waste "
+          f"{stats['pad_frac']*100:4.1f}%, "
+          f"prefill {stats['prefill_s']*1e3:.1f} ms, "
+          f"decode {stats['decode_s']*1e3:.1f} ms")
+print(f"  totals: {totals}")

@@ -1,6 +1,10 @@
 """repro.core — Histogram Sort with Sampling and baselines.
 
-Public API:
+The preferred public surface is `repro.sort` (one `sort()`/`argsort()`/
+`sort_kv()` over every algorithm, with float/duplicate adapters). The
+per-algorithm entry points below remain as thin shims over the same shared
+driver (repro.sort.driver) for back-compat and for device-resident callers:
+
   hss_sort / hss_sort_sharded      the paper's algorithm (Section 4)
   sample_sort                      random/regular sampling baselines (Sec. 3)
   ams_sort                         single-stage AMS scanning baseline (Sec. 3.6)

@@ -48,11 +48,14 @@ def scanning_splitters(probes, probe_ranks, *, p, n, eps):
     return keys, ranks, ok_all
 
 
-def ams_sort_sharded(local, *, axis_name, p, rng, eps=0.05, total_sample=None,
-                     ex_cfg: ExchangeConfig | None = None):
-    ex_cfg = ex_cfg or ExchangeConfig()
-    local_sorted = jnp.sort(local)
-    n_local = local.shape[0]
+def ams_splitters(local_sorted, *, axis_name, p, rng, eps=0.05,
+                  total_sample=None):
+    """Splitter determination only: one sampling round + the scanning pass.
+
+    Returns (splitter_keys, splitter_ranks, sample_overflow, ok). Shared by
+    `ams_sort_sharded` and the `repro.sort` partitioner registry.
+    """
+    n_local = local_sorted.shape[0]
     n = n_local * p
     total_sample = total_sample or ams_sample_size(p, eps, n)
     cap = round_up(max(8, int(3.0 * total_sample / p)), 8)
@@ -61,13 +64,24 @@ def ams_sort_sharded(local, *, axis_name, p, rng, eps=0.05, total_sample=None,
     u = jr.uniform(rng, (n_local,))
     mask = u < prob
     n_hit = jnp.sum(mask.astype(jnp.int32))
-    vals = jnp.sort(jnp.where(mask, local_sorted, hi_sentinel(local.dtype)))[:cap]
+    vals = jnp.sort(jnp.where(mask, local_sorted,
+                              hi_sentinel(local_sorted.dtype)))[:cap]
     ovf = jax.lax.psum(jnp.maximum(n_hit - cap, 0), axis_name)
     probes = jnp.sort(jax.lax.all_gather(vals, axis_name, tiled=True))
     ranks = jax.lax.psum(
         jnp.searchsorted(local_sorted, probes, side="left").astype(jnp.int32),
         axis_name)
     keys, kranks, ok = scanning_splitters(probes, ranks, p=p, n=n, eps=eps)
+    return keys, kranks, ovf, ok
+
+
+def ams_sort_sharded(local, *, axis_name, p, rng, eps=0.05, total_sample=None,
+                     ex_cfg: ExchangeConfig | None = None):
+    ex_cfg = ex_cfg or ExchangeConfig()
+    local_sorted = jnp.sort(local)
+    keys, kranks, ovf, ok = ams_splitters(
+        local_sorted, axis_name=axis_name, p=p, rng=rng, eps=eps,
+        total_sample=total_sample)
     out, n_valid, ex_ovf = exchange(
         local_sorted, keys, axis_name=axis_name, p=p, cfg=ex_cfg, eps=eps)
     return out, n_valid, keys, kranks, ovf + ex_ovf, ok

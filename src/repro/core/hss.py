@@ -14,10 +14,8 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import jax.random as jr
-from jax.sharding import PartitionSpec as P
 
-from repro.core.common import HSSConfig, hi_sentinel
+from repro.core.common import HSSConfig
 from repro.core.exchange import ExchangeConfig, exchange
 from repro.core.splitters import SplitterStats, hss_splitters
 
@@ -65,35 +63,16 @@ def hss_sort_sharded(
 
 
 def _driver(sort_fn, x, mesh, axis_name, seed):
-    devices = mesh.devices.reshape(-1) if mesh is not None else jax.devices()
-    p = len(devices)
-    n = x.shape[0]
-    if p == 1:
-        out = jnp.sort(x)
-        return SortResult(out[None], jnp.full((1,), n, jnp.int32),
-                          jnp.zeros((0,), x.dtype), jnp.zeros((0,), jnp.int32),
-                          jnp.zeros((), jnp.int32), None)
-    if mesh is None:
-        mesh = jax.make_mesh((p,), (axis_name,), devices=devices)
-    if n % p:
-        raise ValueError(f"input length {n} must divide the {p}-way mesh")
-    xs = x.reshape(p, n // p)
+    """Back-compat shim over the shared driver (repro.sort.driver.run).
 
-    def per_shard(xs_block, key):
-        local = xs_block.reshape(-1)
-        rng = jr.fold_in(key, jax.lax.axis_index(axis_name))
-        out, n_valid, keys, ranks, ovf, stats = sort_fn(local, rng)
-        return (out[None], jnp.asarray(n_valid, jnp.int32)[None],
-                keys, ranks, ovf, stats)
-
-    shmap = jax.shard_map(
-        per_shard, mesh=mesh,
-        in_specs=(P(axis_name), P()),
-        out_specs=(P(axis_name), P(axis_name), P(), P(), P(), P()),
-        check_vma=False)
-    key = jr.key(seed)
-    out, counts, keys, ranks, ovf, stats = jax.jit(shmap)(xs, key)
-    return SortResult(out, counts, keys, ranks, ovf, stats)
+    Kept so the legacy per-algorithm entry points (`hss_sort`, `sample_sort`,
+    `ams_sort`) and external callers of the old private hook keep working;
+    new code should target `repro.sort.sort` instead. Unlike the original,
+    non-divisible inputs are sentinel-padded rather than rejected.
+    """
+    from repro.sort import driver as sort_driver
+    return SortResult(*sort_driver.run(
+        sort_fn, x, mesh=mesh, axis_names=(axis_name,), seed=seed))
 
 
 def hss_sort(
@@ -120,9 +99,11 @@ def hss_sort(
     return _driver(sort_fn, x, mesh, axis_name, seed)
 
 
-def gather_sorted(result: SortResult) -> jax.Array:
-    """Concatenate the valid prefixes of all shards (host-side convenience)."""
-    import numpy as np
-    shards = np.asarray(result.shards)
-    counts = np.asarray(result.counts)
-    return np.concatenate([shards[i, :counts[i]] for i in range(shards.shape[0])])
+def gather_sorted(result: SortResult):
+    """Concatenate the valid prefixes of all shards (NumPy convenience).
+
+    Device-side masked concatenate (one scatter) — see
+    repro.sort.driver.masked_concat — instead of a host loop over shards.
+    """
+    from repro.sort.driver import masked_concat
+    return masked_concat(result.shards, result.counts)

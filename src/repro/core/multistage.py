@@ -14,7 +14,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import jax.random as jr
-from jax.sharding import PartitionSpec as P
 
 from repro.core.common import HSSConfig, hi_sentinel
 from repro.core.exchange import ExchangeConfig, exchange
@@ -112,28 +111,21 @@ def two_stage_sort_sharded(
 def two_stage_sort(x, mesh, outer_axis="outer", inner_axis="inner", seed=0,
                    hss_cfg: HSSConfig | None = None,
                    ex_cfg: ExchangeConfig | None = None):
-    """Host-level driver: x (n,) sorted across a 2-D mesh (outer, inner)."""
-    r1, r2 = mesh.shape[outer_axis], mesh.shape[inner_axis]
-    p = r1 * r2
-    n = x.shape[0]
-    if n % p:
-        raise ValueError(f"{n} keys not divisible by {p} shards")
-    xs = x.reshape(r1, r2, n // p)
+    """Host-level entry: x (n,) sorted across a 2-D mesh (outer, inner).
 
-    def per_shard(block, key):
-        local = block.reshape(-1)
-        me = (jax.lax.axis_index(outer_axis) * r2
-              + jax.lax.axis_index(inner_axis))
-        rng = jr.fold_in(key, me)
+    Runs through the shared driver (repro.sort.driver); prefer
+    `repro.sort.sort(x, SortSpec(algorithm="multistage"))` in new code.
+    """
+    from repro.sort import driver as sort_driver
+    r1, r2 = mesh.shape[outer_axis], mesh.shape[inner_axis]
+
+    def sort_fn(local, rng):
         out, n_valid, ovf = two_stage_sort_sharded(
             local, outer_axis=outer_axis, inner_axis=inner_axis,
             r1=r1, r2=r2, rng=rng, hss_cfg=hss_cfg, ex_cfg=ex_cfg)
-        return out[None, None], jnp.asarray(n_valid, jnp.int32)[None, None], ovf
+        return (out, n_valid, jnp.zeros((0,), local.dtype),
+                jnp.zeros((0,), jnp.int32), ovf, jnp.zeros((0,), jnp.int32))
 
-    shmap = jax.shard_map(
-        per_shard, mesh=mesh,
-        in_specs=(P(outer_axis, inner_axis), P()),
-        out_specs=(P(outer_axis, inner_axis), P(outer_axis, inner_axis), P()),
-        check_vma=False)
-    out, counts, ovf = jax.jit(shmap)(xs, jr.key(seed))
-    return out, counts, ovf
+    out, counts, _, _, ovf, _ = sort_driver.run(
+        sort_fn, x, mesh=mesh, axis_names=(outer_axis, inner_axis), seed=seed)
+    return out.reshape(r1, r2, -1), counts.reshape(r1, r2), ovf

@@ -20,6 +20,16 @@ from repro.core.exchange import ExchangeConfig, exchange
 from repro.core.hss import SortResult, _driver
 
 
+def default_total_sample(p: int, n_local: int, eps: float) -> int:
+    """Theorem 3.1 random-sampling sample size: O(p log N / eps)."""
+    return max(p, int(2 * p * math.log2(max(n_local * p, 2)) / eps))
+
+
+def default_regular_s(p: int, eps: float) -> int:
+    """Theorem 3.2 regular-sampling per-shard sample size: s = p/eps."""
+    return max(2, int(p / eps))
+
+
 def random_sample_splitters(local_sorted, *, axis_name, p, total_sample, rng,
                             cap=None):
     """p-1 splitters = evenly spaced keys of a Bernoulli sample of target size."""
@@ -55,12 +65,12 @@ def sample_sort_sharded(local, *, axis_name, p, rng, method="random",
     local_sorted = jnp.sort(local)
     n_local = local.shape[0]
     if method == "random":
-        total_sample = total_sample or max(p, int(2 * p * math.log2(n_local * p) / eps))
+        total_sample = total_sample or default_total_sample(p, n_local, eps)
         keys, ovf = random_sample_splitters(
             local_sorted, axis_name=axis_name, p=p, total_sample=total_sample,
             rng=rng)
     elif method == "regular":
-        s = s or max(2, int(p / eps))
+        s = s or default_regular_s(p, eps)
         keys = regular_sample_splitters(local_sorted, axis_name=axis_name, p=p, s=s)
         ovf = jnp.zeros((), jnp.int32)
     else:

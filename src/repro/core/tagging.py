@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 
 _SIGN = jnp.int32(-2147483648)  # 0x80000000
+_SIGN64_NP = -9223372036854775808  # 0x8000000000000000
 
 
 def float32_to_sortable_int32(x: jax.Array) -> jax.Array:
@@ -39,6 +40,29 @@ def sortable_int32_to_float32(s: jax.Array) -> jax.Array:
     u = s ^ _SIGN
     i = jnp.where(u >= 0, jnp.invert(u), u & jnp.int32(0x7FFFFFFF))
     return jax.lax.bitcast_convert_type(i, jnp.float32)
+
+
+def _sign64():
+    if not jax.config.jax_enable_x64:
+        raise ValueError("float64 sortable bijection needs int64: enable jax x64")
+    import numpy as np
+    return jnp.asarray(np.int64(_SIGN64_NP))
+
+
+def float64_to_sortable_int64(x: jax.Array) -> jax.Array:
+    """Order-preserving bijection float64 -> int64 (same IEEE-754 trick as
+    the 32-bit variant). Requires jax x64."""
+    sign = _sign64()
+    i = jax.lax.bitcast_convert_type(x, jnp.int64)
+    u = jnp.where(i < 0, jnp.invert(i), i | sign)
+    return u ^ sign
+
+
+def sortable_int64_to_float64(s: jax.Array) -> jax.Array:
+    sign = _sign64()
+    u = s ^ sign
+    i = jnp.where(u >= 0, jnp.invert(u), u & ~sign)
+    return jax.lax.bitcast_convert_type(i, jnp.float64)
 
 
 def tag_bits(p: int, n_local: int) -> int:

@@ -6,19 +6,17 @@ sorting (length, doc_id) keys across the data-loader shards is exactly the
 paper's problem: the HSS splitters give every host a near-equal, contiguous
 length range with O(p log log p) metadata traffic instead of a full gather.
 
-`bucket_lengths` runs the real distributed HSS sort over the current host
-mesh; doc ids ride along packed in the low bits (implicit tagging — lengths
-duplicate heavily, the AllZeros-ish regime where tagging is mandatory).
+`bucket_lengths` runs the real distributed sort through the `repro.sort`
+front-door; duplicate tagging (lengths duplicate heavily — the AllZeros-ish
+regime) and doc-id tracking are the adapter layer's job now, so this module
+is just the bucketing policy.
 """
 from __future__ import annotations
-
-import math
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ExchangeConfig, HSSConfig, hss_sort
-from repro.core.tagging import pack_tagged, tag_bits
+from repro.sort import SortSpec, sort
 
 
 def bucket_lengths(lengths: np.ndarray, n_shards: int, eps: float = 0.05,
@@ -34,27 +32,13 @@ def bucket_lengths(lengths: np.ndarray, n_shards: int, eps: float = 0.05,
         raise ValueError(f"n_shards={n_shards} > {len(jax.devices())} devices")
     mesh = jax.make_mesh((n_shards,), ("sort",),
                          devices=jax.devices()[:n_shards])
-    n = lengths.size
-    n_local = math.ceil(n / n_shards)
-    pad = n_local * n_shards - n
-    # pad with max length so pads land in the last shard and are dropped
-    lens = np.concatenate([lengths, np.full(pad, lengths.max(), lengths.dtype)])
-    key_bits = max(1, int(np.ceil(np.log2(int(lens.max()) + 1))))
-    tagged = np.concatenate([
-        np.asarray(pack_tagged(jnp.asarray(lens[i * n_local:(i + 1) * n_local]),
-                               i, p=n_shards, n_local=n_local,
-                               key_bits=key_bits))
-        for i in range(n_shards)])
-    res = hss_sort(jnp.asarray(tagged), mesh=mesh, hss_cfg=HSSConfig(eps=eps),
-                   ex_cfg=ExchangeConfig(strategy="allgather"), seed=seed)
-    shards, counts = np.asarray(res.shards), np.asarray(res.counts)
-    tb = tag_bits(n_shards, n_local)
-    out = []
-    for i in range(n_shards):
-        t = shards[i, :counts[i]].astype(np.int64)
-        ids = t & ((1 << tb) - 1)  # tag == global doc index (contiguous layout)
-        out.append(ids[ids < n])   # drop padding docs
-    return out, counts
+    spec = SortSpec(algorithm="hss", eps=eps, seed=seed, mesh=mesh,
+                    exchange="allgather", stable=True)
+    out = sort(jnp.asarray(lengths), spec)
+    counts = np.asarray(out.counts)
+    indices = np.asarray(out.indices)
+    ids = [indices[i, :counts[i]] for i in range(n_shards)]
+    return ids, counts
 
 
 def pack_documents(doc_ids: np.ndarray, lengths: np.ndarray, seq_len: int):

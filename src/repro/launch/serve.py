@@ -2,6 +2,11 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2-370m --smoke \
         --batch 4 --prompt-len 32 --gen 16
+
+`serve_bucketed` adds request length-bucketing on top: variable-length
+request queues are partitioned into contiguous-length buckets through the
+`repro.sort` front-door (HSS length bucketing, DESIGN.md Section 4.2) so
+each serving batch pads only to its own bucket's max length.
 """
 from __future__ import annotations
 
@@ -19,9 +24,10 @@ from repro.models.steps import make_prefill_step, make_serve_step
 
 
 def serve_batch(cfg, *, batch: int, prompt_len: int, gen: int, ctx=None,
-                seed: int = 0, greedy: bool = True):
+                seed: int = 0, greedy: bool = True, params=None):
     ctx = ctx or host_mesh_ctx(cfg)
-    params = init_params(cfg, jax.random.key(seed))
+    if params is None:
+        params = init_params(cfg, jax.random.key(seed))
     rng = np.random.default_rng(seed)
     max_seq = prompt_len + gen
 
@@ -53,6 +59,42 @@ def serve_batch(cfg, *, batch: int, prompt_len: int, gen: int, ctx=None,
                   "tok_per_s": batch * (gen - 1) / max(t2 - t1, 1e-9)}
 
 
+def serve_bucketed(cfg, *, prompt_lens, gen: int, n_buckets: int = 0,
+                   ctx=None, seed: int = 0, len_multiple: int = 8):
+    """Serve a variable-length request queue in length-homogeneous buckets.
+
+    prompt_lens: (n_requests,) prompt lengths. The queue is partitioned into
+    contiguous-length, near-equal buckets by the distributed sort
+    (repro.data.partition.bucket_lengths); each bucket is served as one
+    batch padded to the bucket's max length (rounded up to `len_multiple`,
+    the SSM chunk size), which is what bounds the padding waste. Returns
+    per-bucket (request_ids, stats) plus totals.
+    """
+    from repro.core.common import round_up
+    from repro.data.partition import bucket_lengths
+    prompt_lens = np.asarray(prompt_lens).astype(np.int32)
+    n_buckets = n_buckets or min(len(jax.devices()),
+                                 max(1, prompt_lens.size // 8))
+    buckets, _ = bucket_lengths(prompt_lens, n_shards=n_buckets, seed=seed)
+    ctx = ctx or host_mesh_ctx(cfg)
+    params = init_params(cfg, jax.random.key(seed))   # shared by all buckets
+    results, tok_total, t_total = [], 0, 0.0
+    for ids in buckets:
+        if not ids.size:
+            continue
+        plen = round_up(int(prompt_lens[ids].max()), len_multiple)
+        toks, stats = serve_batch(cfg, batch=ids.size, prompt_len=plen,
+                                  gen=gen, ctx=ctx, seed=seed, params=params)
+        pad_frac = 1.0 - float(prompt_lens[ids].sum()) / (ids.size * plen)
+        stats["pad_frac"] = pad_frac
+        results.append((ids, stats))
+        tok_total += toks.size
+        t_total += stats["prefill_s"] + stats["decode_s"]
+    totals = {"buckets": len(results), "tokens": tok_total,
+              "total_s": t_total}
+    return results, totals
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -60,8 +102,20 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--bucket", type=int, default=0, metavar="N_REQUESTS",
+                    help="serve N lognormal-length requests via HSS "
+                         "length bucketing instead of one uniform batch")
     args = ap.parse_args()
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.bucket:
+        lens = np.random.default_rng(0).lognormal(
+            3.5, 0.6, size=args.bucket).clip(8, 128).astype(np.int32)
+        results, totals = serve_bucketed(cfg, prompt_lens=lens, gen=args.gen)
+        for ids, stats in results:
+            print(f"bucket of {ids.size:4d} reqs: "
+                  f"{ {k: round(v, 3) for k, v in stats.items()} }")
+        print(totals)
+        return
     toks, stats = serve_batch(cfg, batch=args.batch,
                               prompt_len=args.prompt_len, gen=args.gen)
     print("generated shape:", toks.shape)

@@ -292,12 +292,12 @@ def attention_seqpar(q, k, v, *, causal: bool, chunk: int, ctx,
         return o.reshape(qb.shape[0], s_local, hq, d)
 
     from jax.sharding import PartitionSpec as P
-    return jax.shard_map(
+    from repro.parallel.compat import shard_map
+    return shard_map(
         body, mesh=ctx.mesh,
         in_specs=(P(dpb, ctx.tp_axis, None, None),
                   P(dpb, None, None, None), P(dpb, None, None, None)),
-        out_specs=P(dpb, ctx.tp_axis, None, None),
-        check_vma=False)(q, k, v)
+        out_specs=P(dpb, ctx.tp_axis, None, None))(q, k, v)
 
 
 def attention(q, k, v, *, causal: bool, chunk: int = 0, ctx=None,

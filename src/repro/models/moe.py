@@ -4,9 +4,10 @@ Token dispatch IS the paper's problem (DESIGN.md Section 4.1): partition T
 tokens across expert shards under a static (1+eps) capacity. The dispatch is
 an explicit shard_map so the all-to-all is exactly the capacity-padded dense
 exchange from repro.core.exchange — sort assignments by destination shard
-(argsort = sort-based dispatch), pack per-destination capacity slots, one
-fused all_to_all, grouped-GEMM locally, reverse all_to_all, weighted combine
-at the source. Dropped (over-capacity) assignments are counted and returned.
+via the shared sort-based dispatch in repro.sort.grouping, pack
+per-destination capacity slots, one fused all_to_all, grouped-GEMM locally,
+reverse all_to_all, weighted combine at the source. Dropped (over-capacity)
+assignments are counted and returned.
 
 Two static paths:
   big-T   (train/prefill): tokens context-sharded over the TP axis; a2a moves
@@ -25,24 +26,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.common import round_up
 from repro.models.layers import rmsnorm, swiglu
+from repro.parallel.compat import shard_map
 from repro.parallel.sharding import shard
-
-
-def _group_slots(sorted_group_ids, n_groups: int, capacity: int):
-    """Positions of already-sorted group ids within per-group capacity bins.
-
-    Returns (slot, keep): slot in [0, n_groups*capacity) for kept entries.
-    """
-    n = sorted_group_ids.shape[0]
-    starts = jnp.searchsorted(sorted_group_ids, jnp.arange(n_groups),
-                              side="left").astype(jnp.int32)
-    pos = jnp.arange(n, dtype=jnp.int32) - starts[
-        jnp.clip(sorted_group_ids, 0, n_groups - 1)]
-    valid = (sorted_group_ids >= 0) & (sorted_group_ids < n_groups)
-    keep = valid & (pos < capacity)
-    slot = jnp.clip(sorted_group_ids, 0, n_groups - 1) * capacity + \
-        jnp.clip(pos, 0, capacity - 1)
-    return jnp.where(keep, slot, n_groups * capacity), keep
+from repro.sort.grouping import counting_dispatch
 
 
 def _expert_ffn(buf, w1, w3, w2):
@@ -70,9 +56,8 @@ def _moe_local(flat, wr, w1, w3, w2, *, k, e_local, e0, capacity):
     tok = jnp.arange(t * k, dtype=jnp.int32) // k
     e_rel = jnp.where((flat_e >= e0) & (flat_e < e0 + e_local),
                       flat_e - e0, -1)
-    order = jnp.argsort(e_rel, stable=True)
-    # -1 (non-local) sort first; shift them out by treating them as invalid
-    slot, keep = _group_slots(e_rel[order], e_local, capacity)
+    # -1 (non-local) sort first; counting_dispatch treats them as invalid
+    order, slot, keep = counting_dispatch(e_rel, e_local, capacity)
     rows = flat[tok[order]] * keep[:, None].astype(flat.dtype)
     buf = jnp.zeros((e_local * capacity + 1, flat.shape[1]), flat.dtype)
     buf = buf.at[slot].set(rows)
@@ -95,8 +80,7 @@ def _moe_a2a(flat, wr, w1, w3, w2, *, k, ep, e_local, tp_axis, cap1, cap2,
     flat_g = gates.reshape(-1)
     tok = jnp.arange(t * k, dtype=jnp.int32) // k
     dest = flat_e // e_local
-    order = jnp.argsort(dest, stable=True)               # sort-based dispatch
-    slot1, keep1 = _group_slots(dest[order], ep, cap1)
+    order, slot1, keep1 = counting_dispatch(dest, ep, cap1)  # sort dispatch
     rows = (flat[tok[order]] * keep1[:, None].astype(flat.dtype)).astype(wire)
     send = jnp.zeros((ep * cap1 + 1, d), wire).at[slot1].set(rows)
     send_e = jnp.full((ep * cap1 + 1,), -1, jnp.int32).at[slot1].set(
@@ -107,8 +91,7 @@ def _moe_a2a(flat, wr, w1, w3, w2, *, k, ep, e_local, tp_axis, cap1, cap2,
                                 0, 0, tiled=False).reshape(ep * cap1)
     me = jax.lax.axis_index(tp_axis)
     e_rel = jnp.where(recv_e >= 0, recv_e - me * e_local, -1)
-    order2 = jnp.argsort(e_rel, stable=True)
-    slot2, keep2 = _group_slots(e_rel[order2], e_local, cap2)
+    order2, slot2, keep2 = counting_dispatch(e_rel, e_local, cap2)
     rows2 = recv[order2] * keep2[:, None].astype(recv.dtype)
     buf = jnp.zeros((e_local * cap2 + 1, d), recv.dtype).at[slot2].set(rows2)
     out_e = _expert_ffn(buf[:-1].reshape(e_local, cap2, d), w1, w3, w2)
@@ -205,11 +188,10 @@ def moe_ffn(x, p, cfg, ctx):
             dropped = dropped // max(ctx.dp_size, 1)
         return out.reshape(xb.shape), mean_prob, dropped
 
-    shmap = jax.shard_map(
+    shmap = shard_map(
         body, mesh=ctx.mesh,
         in_specs=(in_x, P()) + w_specs,
-        out_specs=(in_x, P(), P()),
-        check_vma=False)
+        out_specs=(in_x, P(), P()))
     y, mean_prob, dropped = shmap(x, p["router"], *w_in)
     aux = {"router_mean_prob": mean_prob, "dropped": dropped}
     return y, aux

@@ -1,0 +1,21 @@
+"""jax API compatibility shims shared by every shard_map call site.
+
+`jax.shard_map` graduated out of `jax.experimental.shard_map` only in newer
+jax releases (and renamed `check_rep` to `check_vma` on the way). The repo
+supports both: every call site routes through `shard_map` below instead of
+touching `jax.shard_map` directly, so the same code runs on the pinned CI
+jax and on current TPU toolchains.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """`jax.shard_map(..., check_vma=False)` on new jax, experimental on old."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)

@@ -1,0 +1,31 @@
+"""repro.sort — the public distributed-sorting API (DESIGN.md Section 3).
+
+One `sort()`/`argsort()`/`sort_kv()` surface over every partitioning
+strategy in the repo, configured by a single `SortSpec`:
+
+    from repro.sort import SortSpec, sort
+    out = sort(x, SortSpec(algorithm="hss", eps=0.05))
+    np_sorted = out.gather()
+
+Algorithms (see repro.sort.partitioners): "hss" (the paper), the
+"sample_random"/"sample_regular" baselines, "ams", and "multistage"
+(two-stage HSS over a nested mesh). New strategies plug in via
+`register_partitioner`. The shared host driver lives in repro.sort.driver;
+dtype/duplicate adapters in repro.sort.adapters; device-level dispatch
+helpers (MoE) in repro.sort.grouping.
+
+The legacy per-algorithm entry points (`repro.core.hss_sort` et al.) remain
+as thin shims over the same driver.
+"""
+from repro.sort.adapters import SortOutput
+from repro.sort.api import argsort, gather, sort, sort_kv
+from repro.sort.partitioners import (
+    Partitioner, ShardCtx, available_algorithms, get_partitioner,
+    register_partitioner)
+from repro.sort.spec import ALGORITHMS, SortSpec
+
+__all__ = [
+    "ALGORITHMS", "Partitioner", "ShardCtx", "SortOutput", "SortSpec",
+    "argsort", "available_algorithms", "gather", "get_partitioner",
+    "register_partitioner", "sort", "sort_kv",
+]

@@ -1,0 +1,277 @@
+"""Dtype and duplicate-tagging adapters for the `repro.sort` front-door.
+
+The core partitioners operate on 1-D arrays of *distinct, integer-ordered*
+keys (the paper's analysis assumes distinct keys; XLA sentinels assume
+integer-comparable buffers). This module bridges arbitrary user inputs onto
+that contract and back:
+
+  * float keys are routed through the order-preserving IEEE-754 bijection
+    (repro.core.tagging): float32 <-> int32, float64 <-> int64 (jax x64);
+  * duplicate keys — always present for `stable=True`, `argsort`,
+    `sort_kv`, and auto-detected otherwise — are made distinct by implicit
+    tagging (paper Section 6.3): keys are rebased to their observed range
+    and packed as (key << b) | global_index, so the tag doubles as the
+    argsort permutation on the way out;
+  * non-divisible inputs are padded *before* packing with the maximum real
+    key, so pads sort to the global tail and the driver trims them.
+
+An `AdapterPlan` is built per call (it inspects the key range — a few O(n)
+device reductions whose scalar results sync to host) and exposes
+`encode(x)` / `decode(raw)`, both device-side. The raw core path
+(`repro.core.hss_sort` et al.) remains available for callers that cannot
+afford even the scalar syncs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.common import hi_sentinel
+from repro.core.tagging import (
+    float32_to_sortable_int32, float64_to_sortable_int64,
+    sortable_int32_to_float32, sortable_int64_to_float64, tag_bits)
+from repro.sort.spec import SortSpec
+
+
+class SortOutput:
+    """Decoded result of `repro.sort.sort`.
+
+    shards   (p, cap) sorted keys per shard, original dtype; slots past
+             counts[i] hold the dtype's +sentinel.
+    counts   (p,) valid keys per shard (pads already trimmed; sums to n
+             when overflow == 0).
+    indices  (p, cap) original global positions of the keys (the argsort
+             permutation), -1 past counts[i]; None when the sort ran
+             untagged.
+    overflow dropped-key count (0 => exact, the contract callers check).
+    splitter_keys / splitter_ranks / stats  diagnostics from the
+             partitioner (splitter keys decoded back to the key domain).
+    n        number of real input keys.
+    """
+
+    def __init__(self, shards, counts, indices, overflow, splitter_keys,
+                 splitter_ranks, stats, n):
+        self.shards = shards
+        self.counts = counts
+        self.indices = indices
+        self.overflow = overflow
+        self.splitter_keys = splitter_keys
+        self.splitter_ranks = splitter_ranks
+        self.stats = stats
+        self.n = n
+
+    def gather(self) -> np.ndarray:
+        """All keys globally sorted, as one (n,) NumPy array."""
+        from repro.sort.driver import masked_concat
+        return masked_concat(self.shards, self.counts)
+
+    def gather_indices(self) -> np.ndarray:
+        """The argsort permutation, as one (n,) NumPy array."""
+        if self.indices is None:
+            raise ValueError("sort ran untagged: no indices were tracked "
+                             "(use stable=True / tag=True, or argsort())")
+        from repro.sort.driver import masked_concat
+        return masked_concat(self.indices, self.counts)
+
+
+@dataclasses.dataclass
+class AdapterPlan:
+    spec: SortSpec
+    p: int
+    n: int                 # real keys
+    n_pad: int
+    out_dtype: Any         # user-facing key dtype
+    float_bits: int        # 0 | 32 | 64
+    tagged: bool
+    tag_b: int = 0
+    key_min: int = 0       # rebase offset in the (encoded-)integer domain
+    key_max: int = 0
+    pack_dtype: Any = None
+    _enc: Any = None       # bijection result cached by make_plan (tagged)
+
+    def encode(self, x: jax.Array) -> jax.Array:
+        if self._enc is not None:
+            enc = self._enc
+        elif self.float_bits == 32:
+            enc = float32_to_sortable_int32(x)
+        elif self.float_bits == 64:
+            enc = float64_to_sortable_int64(x)
+        else:
+            enc = x
+        if not self.tagged:
+            # pads (hi sentinel) are appended by the driver
+            return enc
+        # pack device-side: the rebased key fits the pack dtype by
+        # construction (make_plan checked the bit budget). Rebase in
+        # whichever domain is wide enough — the key dtype itself when the
+        # pack dtype is no wider (keeps uint key_min representable), the
+        # pack dtype otherwise (avoids overflow of signed-min + range).
+        dt = jnp.dtype(self.pack_dtype)
+        if self.n_pad:   # pads = max real key; sort to the global tail
+            pad = jnp.full((self.n_pad,), jnp.asarray(self.key_max, enc.dtype))
+            enc = jnp.concatenate([enc, pad])
+        wide = enc.astype(dt) if dt.itemsize > enc.dtype.itemsize else enc
+        e = (wide - jnp.asarray(self.key_min, wide.dtype)).astype(dt)
+        return (e << self.tag_b) | jnp.arange(e.shape[0], dtype=dt)
+
+    def encode_probes(self, probes) -> jax.Array:
+        """Warm-start probes (original key domain) -> encoded domain."""
+        probes = jnp.asarray(probes)
+        if self.float_bits == 32:
+            probes = float32_to_sortable_int32(probes)
+        elif self.float_bits == 64:
+            probes = float64_to_sortable_int64(probes)
+        if not self.tagged:
+            return probes
+        e = np.asarray(probes).astype(np.int64)
+        return jnp.asarray(((e - self.key_min) << self.tag_b)
+                           .astype(self.pack_dtype))
+
+    def decode(self, raw) -> SortOutput:
+        shards, counts, skeys, sranks, overflow, stats = raw
+        cap = shards.shape[1]
+        valid = jnp.arange(cap, dtype=jnp.int32)[None, :] \
+            < jnp.asarray(counts, jnp.int32)[:, None]
+        indices = None
+        if self.tagged:
+            mask = (1 << self.tag_b) - 1
+            raw_idx = shards & mask
+            if self.n_pad:
+                # pads carry indices >= n; they may have been counted as
+                # valid by the exchange — exact even under key drops
+                pads = valid & (raw_idx >= self.n)
+                counts = (jnp.asarray(counts, jnp.int32)
+                          - jnp.sum(pads, axis=1).astype(jnp.int32))
+                valid = jnp.arange(cap, dtype=jnp.int32)[None, :] \
+                    < counts[:, None]
+            indices = jnp.where(valid, raw_idx, -1)
+            shards = self._unrebase(shards >> self.tag_b)
+            if skeys.size:
+                skeys = self._unrebase(skeys >> self.tag_b)
+        shards = self._decode_keys(shards)
+        skeys = self._decode_keys(skeys) if skeys.size else skeys
+        shards = jnp.where(valid, shards, hi_sentinel(self.out_dtype))
+        return SortOutput(shards, counts, indices, overflow, skeys, sranks,
+                          stats, self.n)
+
+    def _unrebase(self, rebased):
+        """rebased (pack dtype, in [0, key_range]) -> original key domain.
+
+        The addition must run in the output integer domain: key_min may not
+        be representable in the pack dtype (uint keys above the signed max).
+        """
+        if self.float_bits:   # encoded-int domain == pack dtype; min fits
+            return rebased + self.key_min
+        return (rebased.astype(self.out_dtype)
+                + jnp.asarray(self.key_min, self.out_dtype))
+
+    def _decode_keys(self, enc):
+        if self.float_bits == 32:
+            return sortable_int32_to_float32(enc.astype(jnp.int32))
+        if self.float_bits == 64:
+            return sortable_int64_to_float64(enc)
+        return enc.astype(self.out_dtype)
+
+
+def _needs_tags(x: jax.Array, spec: SortSpec, want_indices: bool):
+    """-> (wanted, required). Required tagging errors out when the packing
+    budget does not fit; merely wanted tagging (auto duplicate detection)
+    falls back to untagged, which still sorts correctly — duplicates only
+    cost load balance, and that surfaces through the overflow counter."""
+    if spec.tag is not None:
+        if not spec.tag and want_indices:
+            raise ValueError("argsort/sort_kv require tagging (tag=False set)")
+        return spec.tag, spec.tag
+    if spec.stable or want_indices:
+        return True, True
+    # auto duplicate detection: a device-side sort + adjacent-equal check
+    # (only a scalar crosses to host); override with tag=False when keys
+    # are known-distinct and the check matters.
+    s = jnp.sort(x)
+    return bool(jnp.any(s[1:] == s[:-1])), False
+
+
+def make_plan(x: jax.Array, spec: SortSpec, p: int,
+              want_indices: bool = False) -> AdapterPlan:
+    """Inspect the input and decide bijection/tagging/padding. Host-side."""
+    n = x.shape[0]
+    if n == 0:
+        raise ValueError("cannot sort an empty array")
+    n_pad = (-n) % p
+    dtype = jnp.dtype(x.dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        if dtype == jnp.float32:
+            float_bits = 32
+        elif dtype == jnp.float64:
+            float_bits = 64
+            if not jax.config.jax_enable_x64:
+                raise ValueError("float64 keys need jax x64 enabled "
+                                 "(they map onto sortable int64)")
+        else:
+            raise ValueError(f"unsupported float dtype {dtype}; cast to "
+                             "float32/float64 first")
+    elif jnp.issubdtype(dtype, jnp.integer):
+        float_bits = 0
+    else:
+        raise ValueError(f"unsupported key dtype {dtype}")
+    plan = AdapterPlan(spec=spec, p=p, n=n, n_pad=n_pad, out_dtype=dtype,
+                       float_bits=float_bits, tagged=False)
+
+    if float_bits == 32:
+        enc = float32_to_sortable_int32(x)
+        enc_sentinel = int(jnp.iinfo(jnp.int32).max)
+    elif float_bits == 64:
+        enc = float64_to_sortable_int64(x)
+        enc_sentinel = int(jnp.iinfo(jnp.int64).max)
+    else:
+        enc = x
+        enc_sentinel = int(jnp.iinfo(dtype).max)
+    plan._enc = enc if float_bits else None   # reuse bijection in encode()
+
+    wanted, required = _needs_tags(x, spec, want_indices)
+    key_max = int(jnp.max(enc))
+    if key_max == enc_sentinel:
+        # keys whose (encoded) value equals the hi sentinel the untagged
+        # pipeline uses for padding/buffers would be silently dropped —
+        # dtype-max ints, or the float NaN payload that maps onto it;
+        # tagging rebases keys below the sentinel, so force it (or refuse).
+        if spec.tag is False:
+            raise ValueError(
+                f"keys contain the {dtype} sentinel value (dtype max, or a "
+                "NaN payload mapping onto it) reserved by the untagged path "
+                "(tag=False): remove those keys or drop tag=False")
+        wanted = required = True
+    if not wanted:
+        return plan
+
+    # tagging: compute the packing budget from the observed key range
+    key_min = int(jnp.min(enc))
+    key_bits = max(1, int(key_max - key_min).bit_length())
+    n_local = (n + n_pad) // p
+    b = tag_bits(p, n_local)
+    total = key_bits + b
+    if total <= 30:           # one bit of headroom below the int32 sentinel
+        pack_dtype = np.int32
+    elif total <= 62 and jax.config.jax_enable_x64:
+        pack_dtype = np.int64
+    elif not required:
+        return plan           # auto-tagging doesn't fit: sort untagged
+    elif total <= 62:
+        raise ValueError(
+            f"key range needs {key_bits} bits + {b} tag bits > 30: "
+            "enable jax x64 for int64 packing, or pass tag=False for "
+            "known-distinct keys")
+    else:
+        raise ValueError(f"key_bits={key_bits} + tag_bits={b} > 62: "
+                         "compress the key range before sorting")
+    plan.tagged = True
+    plan.tag_b = b
+    plan.key_min = key_min
+    plan.key_max = key_max
+    plan.pack_dtype = pack_dtype
+    plan._enc = enc        # reuse the bijection result in encode()
+    return plan

@@ -1,0 +1,108 @@
+"""The unified sort front-door: `sort`, `argsort`, `sort_kv`.
+
+One entry point over every partitioning strategy in the repo (DESIGN.md
+Section 3). Callers pick an algorithm with `SortSpec(algorithm=...)` and the
+adapter layer takes care of float keys, duplicates, payload permutation, and
+ragged input lengths — none of which the raw `repro.core` entry points
+handle for you.
+
+    from repro.sort import SortSpec, sort, argsort, sort_kv
+
+    out = sort(x)                                 # HSS, all devices
+    out = sort(x, SortSpec(algorithm="ams", eps=0.1))
+    out = sort(x, algorithm="sample_regular")     # kwargs build the spec
+    order = argsort(x)                            # stable, duplicate-safe
+    keys, vals = sort_kv(lengths, doc_ids)        # payloads ride along
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sort import driver
+from repro.sort.adapters import SortOutput, make_plan
+from repro.sort.partitioners import ShardCtx, get_partitioner
+from repro.sort.spec import SortSpec
+
+
+def _as_spec(spec, overrides) -> SortSpec:
+    if spec is None:
+        return SortSpec(**overrides)
+    if not isinstance(spec, SortSpec):
+        raise TypeError(f"spec must be a SortSpec, got {type(spec)}")
+    return dataclasses.replace(spec, **overrides) if overrides else spec
+
+
+def _sort_impl(x, spec: SortSpec, want_indices: bool) -> SortOutput:
+    part = get_partitioner(spec.algorithm)
+    x = jnp.asarray(x)
+    if x.ndim != 1:
+        raise ValueError(f"sort expects a 1-D key array, got shape {x.shape}")
+    p = spec.mesh.devices.size if spec.mesh is not None else len(jax.devices())
+    axes = part.mesh_axes(spec, p)
+    names = tuple(a for a, _ in axes)
+    sizes = tuple(s for _, s in axes)
+
+    plan = make_plan(x, spec, p, want_indices=want_indices)
+    enc = plan.encode(x)
+    probes = (plan.encode_probes(spec.initial_probes)
+              if spec.initial_probes is not None else None)
+    ctx = ShardCtx(spec=spec, axis_names=names, sizes=sizes, rng=None,
+                   initial_probes=probes)
+    raw = driver.run(
+        lambda local, rng: part.sharded(local, rng, ctx),
+        enc, mesh=spec.mesh, axis_names=names, sizes=sizes, seed=spec.seed,
+        n_real=plan.n)
+    return plan.decode(raw)
+
+
+def sort(x, spec: SortSpec | None = None, **overrides) -> SortOutput:
+    """Sort a 1-D array of keys across the mesh. Returns a SortOutput whose
+    `shards`/`counts` are the distributed result and `.gather()` the flat
+    sorted array. Float keys and duplicate-heavy keys are handled by the
+    adapter layer automatically; see SortSpec for every knob."""
+    return _sort_impl(x, _as_spec(spec, overrides), want_indices=False)
+
+
+def _exact_or_raise(out: "SortOutput", what: str) -> "SortOutput":
+    """argsort/sort_kv return flat permutations, so dropped keys can't be
+    signalled through a counter the way sort() does — fail loudly instead."""
+    if int(np.asarray(out.overflow)) != 0:
+        raise RuntimeError(
+            f"{what}: exchange dropped {int(np.asarray(out.overflow))} keys "
+            "(capacity overflow) — the result would not be a permutation. "
+            "Raise pair_factor/out_slack or use exchange='allgather'.")
+    return out
+
+
+def argsort(x, spec: SortSpec | None = None, **overrides) -> np.ndarray:
+    """Stable distributed argsort: the permutation that sorts x, as a flat
+    (n,) NumPy array. Implemented via implicit tagging — the per-key tag IS
+    the original index, so the permutation falls out of the sorted keys.
+    Raises if the exchange overflowed (the result must be exact)."""
+    spec = dataclasses.replace(_as_spec(spec, overrides), stable=True)
+    out = _exact_or_raise(_sort_impl(x, spec, want_indices=True), "argsort")
+    return out.gather_indices()
+
+
+def sort_kv(keys, values, spec: SortSpec | None = None, **overrides):
+    """Sort (key, value) pairs by key, stably. Returns (sorted_keys,
+    sorted_values) as NumPy arrays; values may be multi-dimensional (the
+    permutation applies along axis 0)."""
+    values = np.asarray(values)
+    keys = jnp.asarray(keys)
+    if values.shape[:1] != keys.shape:
+        raise ValueError(f"values leading dim {values.shape[:1]} != "
+                         f"keys shape {keys.shape}")
+    spec = dataclasses.replace(_as_spec(spec, overrides), stable=True)
+    out = _exact_or_raise(_sort_impl(keys, spec, want_indices=True), "sort_kv")
+    order = out.gather_indices()
+    return out.gather(), values[order]
+
+
+def gather(out: SortOutput) -> np.ndarray:
+    """Module-level alias for SortOutput.gather()."""
+    return out.gather()

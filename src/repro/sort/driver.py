@@ -1,0 +1,192 @@
+"""The shared host-level sort driver (DESIGN.md Section 3.2).
+
+Every distributed sort in the repo — HSS, the sample-sort baselines, AMS,
+and multi-stage HSS — shares one skeleton: reshape the global key array onto
+a mesh, run a shard_map-resident `sort_fn(local, rng) -> 6-tuple`, and
+reassemble the per-shard results. This module is that skeleton, promoted out
+of the old private `repro.core.hss._driver` and generalized:
+
+  * mesh resolution: accepts an explicit Mesh (1-D or N-D) or builds one
+    over all devices from `(axis_name, size)` pairs;
+  * p == 1 short-circuit: a plain local `jnp.sort`, no collectives;
+  * non-divisible inputs: instead of the old `ValueError`, inputs whose
+    length does not divide the shard count are sentinel-padded up to the
+    next multiple. Pads are the globally largest keys, so they land on the
+    tail of the last shard; any that the exchange counted as valid are
+    stripped back out of the returned counts (`strip_sentinel_counts`);
+  * shard_map construction via the version-compat wrapper in
+    repro.parallel.compat.
+
+The shard-level contract: `sort_fn(local, rng)` returns
+`(out, n_valid, splitter_keys, splitter_ranks, overflow, stats)` where `out`
+is the shard's sentinel-padded sorted slice of static shape and `stats` is a
+`SplitterStats` (or any fixed pytree, replicated across shards).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import jax.random as jr
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.common import hi_sentinel
+from repro.parallel.compat import shard_map
+
+
+class MeshPlan(NamedTuple):
+    mesh: object          # jax.sharding.Mesh
+    axis_names: tuple     # mesh axes the sort spans, outermost first
+    sizes: tuple          # per-axis sizes; p == prod(sizes)
+    p: int
+
+
+def resolve_mesh(mesh, axis_names, sizes=None) -> MeshPlan:
+    """Build/validate the mesh the sort runs over.
+
+    mesh=None: make a fresh mesh over all devices; `sizes` (if given) must
+    multiply to the device count, else all devices go on one axis.
+    mesh given: its named axes must cover `axis_names`.
+    """
+    axis_names = tuple(axis_names)
+    if mesh is not None:
+        missing = [a for a in axis_names if a not in mesh.shape]
+        extra = [a for a in mesh.shape if a not in axis_names]
+        if missing or extra:
+            raise ValueError(
+                f"sort over axes {axis_names} needs a mesh with exactly "
+                f"those axes; got {dict(mesh.shape)}")
+        sizes = tuple(mesh.shape[a] for a in axis_names)
+        return MeshPlan(mesh, axis_names, sizes, int(np.prod(sizes)))
+    devices = jax.devices()
+    p = len(devices)
+    if sizes is None:
+        if len(axis_names) != 1:
+            raise ValueError("sizes required for a multi-axis auto mesh")
+        sizes = (p,)
+    if int(np.prod(sizes)) != p:
+        raise ValueError(f"mesh sizes {sizes} != {p} devices")
+    mesh = jax.make_mesh(tuple(sizes), axis_names, devices=devices)
+    return MeshPlan(mesh, axis_names, tuple(sizes), p)
+
+
+def factor_stages(p: int) -> tuple[int, int]:
+    """(r1, r2) with r1*r2 == p and r1 the largest divisor <= sqrt(p)."""
+    r1 = 1
+    for d in range(1, int(np.sqrt(p)) + 1):
+        if p % d == 0:
+            r1 = d
+    return r1, p // r1
+
+
+def pad_to_shards(x: jax.Array, p: int):
+    """Sentinel-pad x up to a multiple of p. Returns (padded, n_pad).
+
+    Refuses sentinel-valued real keys when it has to pad: they would be
+    indistinguishable from the pads and silently stripped with the pads
+    later. The `repro.sort` front-door rebases such keys below the sentinel
+    via tagging before they ever reach here; raw-core callers must keep
+    dtype-max keys out or supply divisible input (the documented contract).
+    """
+    n = x.shape[0]
+    n_pad = (-n) % p
+    if n_pad == 0:
+        return x, 0
+    pad_value = hi_sentinel(x.dtype)
+    if bool(jnp.max(x) == pad_value):
+        raise ValueError(
+            f"input length {n} needs sentinel padding to fill {p} shards, "
+            f"but the keys contain the sentinel value {pad_value} — use "
+            "repro.sort.sort (which tags such keys) or pad the input "
+            "yourself")
+    pad = jnp.full((n_pad,), pad_value, x.dtype)
+    return jnp.concatenate([x, pad]), n_pad
+
+
+def strip_sentinel_counts(shards, counts):
+    """Exclude sentinel-valued entries from per-shard valid counts.
+
+    Used when the driver sentinel-padded a non-divisible input: pads travel
+    through the exchange as ordinary (globally largest) keys and some
+    strategies count them as valid. Counting the sentinels actually present
+    in each valid prefix — rather than assuming `n_pad` survived — stays
+    exact even when the exchange dropped keys. Strategies that already
+    filter sentinels (allgather) see no change.
+    """
+    cap = shards.shape[1]
+    counts = jnp.asarray(counts, jnp.int32)
+    valid = jnp.arange(cap, dtype=jnp.int32)[None, :] < counts[:, None]
+    pads = valid & (shards == hi_sentinel(shards.dtype))
+    return counts - jnp.sum(pads, axis=1).astype(jnp.int32)
+
+
+def run(sort_fn, x, *, mesh=None, axis_names=("sort",), sizes=None, seed=0,
+        n_real=None):
+    """Run a shard-level sort over a mesh; returns the raw 6-tuple with
+    leading (p, ...) shard dims: (shards, counts, keys, ranks, overflow,
+    stats). Inputs the driver itself had to sentinel-pad get their counts
+    corrected via `strip_sentinel_counts`; callers that pre-padded with
+    non-sentinel values (the tagged adapter path) correct counts on decode.
+    `n_real` (default: len(x)) is the non-pad key count for the p==1 path.
+    """
+    plan = resolve_mesh(mesh, axis_names, sizes)
+    p = plan.p
+    n_real = x.shape[0] if n_real is None else n_real
+    if p == 1:
+        out = jnp.sort(x)
+        return (out[None], jnp.full((1,), n_real, jnp.int32),
+                jnp.zeros((0,), x.dtype), jnp.zeros((0,), jnp.int32),
+                jnp.zeros((), jnp.int32), None)
+    x, n_pad = pad_to_shards(x, p)
+    n_local = x.shape[0] // p
+    xs = x.reshape(plan.sizes + (n_local,))
+    naxes = len(plan.axis_names)
+
+    def per_shard(block, key):
+        local = block.reshape(-1)
+        me = jnp.int32(0)
+        for name, size in zip(plan.axis_names, plan.sizes):
+            me = me * size + jax.lax.axis_index(name)
+        rng = jr.fold_in(key, me)
+        out, n_valid, keys, ranks, ovf, stats = sort_fn(local, rng)
+        lead = (1,) * naxes
+        return (out.reshape(lead + out.shape),
+                jnp.asarray(n_valid, jnp.int32).reshape(lead),
+                keys, ranks, ovf, stats)
+
+    sharded = P(*plan.axis_names)
+    shmap = shard_map(
+        per_shard, mesh=plan.mesh,
+        in_specs=(sharded, P()),
+        out_specs=(sharded, sharded, P(), P(), P(), P()))
+    out, counts, keys, ranks, ovf, stats = jax.jit(shmap)(xs, jr.key(seed))
+    out = out.reshape((p,) + out.shape[naxes:])
+    counts = counts.reshape(p)
+    if n_pad:   # our sentinel pads may have been counted as keys
+        counts = strip_sentinel_counts(out, counts)
+    return out, counts, keys, ranks, ovf, stats
+
+
+def masked_concat(shards, counts, total=None) -> np.ndarray:
+    """Concatenate the valid prefixes of all shards into one array.
+
+    Device-side: one scatter over the flattened shard buffer (invalid slots
+    dropped via out-of-range indices), replacing the old host Python loop.
+    Returns NumPy, like the old `gather_sorted`.
+    """
+    shards = jnp.asarray(shards)
+    counts_np = np.asarray(counts).astype(np.int64)
+    total = int(counts_np.sum()) if total is None else total
+    if total == 0:
+        return np.zeros((0,), shards.dtype)
+    p, cap = shards.shape
+    offsets = jnp.asarray(np.concatenate([[0], np.cumsum(counts_np)[:-1]]),
+                          jnp.int32)
+    pos = jnp.arange(cap, dtype=jnp.int32)[None, :]
+    valid = pos < jnp.asarray(counts_np, jnp.int32)[:, None]
+    idx = jnp.where(valid, offsets[:, None] + pos, total)  # `total` => dropped
+    out = jnp.zeros((total,), shards.dtype).at[idx.reshape(-1)].set(
+        shards.reshape(-1), mode="drop")
+    return np.asarray(out)

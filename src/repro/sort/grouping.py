@@ -1,0 +1,49 @@
+"""Device-level sort-based dispatch helpers (DESIGN.md Section 4.1).
+
+MoE token dispatch is the paper's partitioning problem at micro scale: N
+items carrying small destination ids must be placed into per-destination
+capacity bins. The repo's MoE layer does this with a stable argsort by
+destination followed by slot assignment — the same sort-based dispatch the
+`repro.sort` front-door exposes at cluster scale, shrunk to one shard's
+registers. These helpers are shard_map-resident (pure jnp, no collectives)
+so `repro.models.moe` and any future dispatch path share one implementation.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def group_slots(sorted_group_ids, n_groups: int, capacity: int):
+    """Positions of already-sorted group ids within per-group capacity bins.
+
+    Returns (slot, keep): slot in [0, n_groups*capacity) for kept entries;
+    entries with out-of-range ids or beyond a group's capacity get
+    slot == n_groups*capacity (callers scatter into a buffer with one
+    overflow row) and keep == False.
+    """
+    n = sorted_group_ids.shape[0]
+    starts = jnp.searchsorted(sorted_group_ids, jnp.arange(n_groups),
+                              side="left").astype(jnp.int32)
+    pos = jnp.arange(n, dtype=jnp.int32) - starts[
+        jnp.clip(sorted_group_ids, 0, n_groups - 1)]
+    valid = (sorted_group_ids >= 0) & (sorted_group_ids < n_groups)
+    keep = valid & (pos < capacity)
+    slot = jnp.clip(sorted_group_ids, 0, n_groups - 1) * capacity + \
+        jnp.clip(pos, 0, capacity - 1)
+    return jnp.where(keep, slot, n_groups * capacity), keep
+
+
+def counting_dispatch(group_ids, n_groups: int, capacity: int):
+    """Stable sort-based dispatch of items into per-group capacity bins.
+
+    group_ids: (n,) int32 destination ids; ids outside [0, n_groups) are
+    dropped (keep == False). Returns (order, slot, keep) where `order` is
+    the stable argsort by destination (ties keep input order — exactly the
+    implicit-tagging order of the distributed sort) and slot/keep are
+    `group_slots` of the sorted ids. Scatter pattern:
+
+        buf = zeros((n_groups*capacity + 1, d)).at[slot].set(rows[order])
+    """
+    order = jnp.argsort(group_ids, stable=True)
+    slot, keep = group_slots(group_ids[order], n_groups, capacity)
+    return order, slot, keep

@@ -1,0 +1,194 @@
+"""Partitioner registry: each sort algorithm as a splitter strategy.
+
+The paper's observation (HSS Secs. 3-4; also Axtmann et al.'s AMS framing)
+is that Sample sort, AMS, and HSS share one three-phase skeleton — local
+sort, splitter determination, exchange — and differ ONLY in how the p-1
+splitters are determined. The registry makes that literal: an algorithm is
+a `Partitioner` whose `splitters(local_sorted, ctx)` runs shard_map-resident
+and returns the splitter keys; the surrounding skeleton (`sharded_sort`) and
+the host driver (repro.sort.driver) are shared.
+
+Multi-stage HSS is the one exception: it runs two nested exchanges, so it
+overrides the whole shard-level pipeline (`sharded`) instead of just
+`splitters`, and asks the driver for a 2-D mesh via `mesh_axes`.
+
+Third-party strategies plug in with `register_partitioner`:
+
+    @register_partitioner("mybisect")
+    class MyPartitioner:
+        def splitters(self, local_sorted, ctx): ...
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.core.ams import ams_splitters
+from repro.core.exchange import exchange
+from repro.core.multistage import two_stage_sort_sharded
+from repro.core.sample_sort import (
+    default_regular_s, default_total_sample, random_sample_splitters,
+    regular_sample_splitters)
+from repro.core.splitters import SplitterStats, hss_splitters
+from repro.sort.driver import factor_stages
+from repro.sort.spec import SortSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Everything a partitioner sees inside shard_map, besides the keys."""
+
+    spec: SortSpec
+    axis_names: tuple      # mesh axes of this sort, outermost first
+    sizes: tuple           # per-axis shard counts
+    rng: Any               # per-shard PRNG key
+    initial_probes: Any = None
+
+    @property
+    def p(self) -> int:
+        return int(math.prod(self.sizes))
+
+    @property
+    def axis_name(self) -> str:
+        return self.axis_names[0]
+
+    @property
+    def hss_cfg(self):
+        return self.spec.hss_config()
+
+    @property
+    def ex_cfg(self):
+        return self.spec.exchange_config()
+
+
+def null_stats(n_satisfied=None) -> SplitterStats:
+    """Placeholder stats for algorithms without per-round diagnostics."""
+    z = jnp.zeros((1,), jnp.int32)
+    sat = z if n_satisfied is None else jnp.asarray(n_satisfied, jnp.int32)[None]
+    return SplitterStats(gamma_size=z, sample_count=z, overflow=z,
+                         n_satisfied=sat, rounds_used=jnp.int32(1))
+
+
+class Partitioner:
+    """Base strategy. Subclasses implement `splitters`; the standard
+    shard-level pipeline (`sharded`) and mesh shape come for free."""
+
+    name: str = "?"
+
+    def mesh_axes(self, spec: SortSpec, p: int):
+        """((axis_name, size), ...) this algorithm wants the driver to use."""
+        return ((spec.axis_name, p),)
+
+    def splitters(self, local_sorted, ctx: ShardCtx):
+        """-> (splitter_keys (p-1,), splitter_ranks (p-1,), overflow, stats)."""
+        raise NotImplementedError
+
+    def sharded(self, local, rng, ctx: ShardCtx):
+        """Full shard-level sort: local sort -> splitters -> exchange."""
+        local_sort_fn = ctx.spec.local_sort_fn or jnp.sort
+        local_sorted = local_sort_fn(local)
+        keys, ranks, s_ovf, stats = self.splitters(
+            local_sorted, dataclasses.replace(ctx, rng=rng))
+        out, n_valid, e_ovf = exchange(
+            local_sorted, keys, axis_name=ctx.axis_name, p=ctx.p,
+            cfg=ctx.ex_cfg, eps=ctx.spec.eps)
+        return out, n_valid, keys, ranks, s_ovf + e_ovf, stats
+
+
+_REGISTRY: dict[str, Partitioner] = {}
+
+
+def register_partitioner(name: str):
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls()
+        return cls
+    return deco
+
+
+def get_partitioner(name: str) -> Partitioner:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown sort algorithm {name!r}; available: "
+            f"{sorted(_REGISTRY)}") from None
+
+
+def available_algorithms() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+@register_partitioner("hss")
+class HSSPartitioner(Partitioner):
+    """Histogram Sort with Sampling (the paper's algorithm, Section 4)."""
+
+    def splitters(self, local_sorted, ctx):
+        keys, ranks, stats = hss_splitters(
+            local_sorted, axis_name=ctx.axis_name, p=ctx.p, cfg=ctx.hss_cfg,
+            rng=ctx.rng, initial_probes=ctx.initial_probes)
+        return keys, ranks, jnp.zeros((), jnp.int32), stats
+
+
+@register_partitioner("sample_random")
+class RandomSamplePartitioner(Partitioner):
+    """Random-sampling sample sort (Blelloch et al.; Theorem 3.1)."""
+
+    def splitters(self, local_sorted, ctx):
+        total = ctx.spec.total_sample or default_total_sample(
+            ctx.p, local_sorted.shape[0], ctx.spec.eps)
+        keys, ovf = random_sample_splitters(
+            local_sorted, axis_name=ctx.axis_name, p=ctx.p,
+            total_sample=total, rng=ctx.rng)
+        return keys, jnp.zeros_like(keys, jnp.int32), ovf, null_stats()
+
+
+@register_partitioner("sample_regular")
+class RegularSamplePartitioner(Partitioner):
+    """Regular-sampling sample sort (PSRS; Theorem 3.2). Deterministic."""
+
+    def splitters(self, local_sorted, ctx):
+        s = ctx.spec.s or default_regular_s(ctx.p, ctx.spec.eps)
+        keys = regular_sample_splitters(
+            local_sorted, axis_name=ctx.axis_name, p=ctx.p, s=s)
+        return (keys, jnp.zeros_like(keys, jnp.int32),
+                jnp.zeros((), jnp.int32), null_stats())
+
+
+@register_partitioner("ams")
+class AMSPartitioner(Partitioner):
+    """Single-stage AMS scanning baseline (Section 3.6, Appendix A)."""
+
+    def splitters(self, local_sorted, ctx):
+        keys, ranks, ovf, ok = ams_splitters(
+            local_sorted, axis_name=ctx.axis_name, p=ctx.p, rng=ctx.rng,
+            eps=ctx.spec.eps, total_sample=ctx.spec.total_sample)
+        return keys, ranks, ovf, null_stats(
+            jnp.where(ok, ctx.p - 1, 0))
+
+
+@register_partitioner("multistage")
+class MultistagePartitioner(Partitioner):
+    """Two-stage HSS (Sections 5.3/6.1): group split + intra-group sort."""
+
+    def mesh_axes(self, spec: SortSpec, p: int):
+        if spec.mesh is not None:   # honor the caller's (r1, r2) factoring
+            return ((spec.outer_axis, spec.mesh.shape[spec.outer_axis]),
+                    (spec.inner_axis, spec.mesh.shape[spec.inner_axis]))
+        r1, r2 = factor_stages(p)
+        return ((spec.outer_axis, r1), (spec.inner_axis, r2))
+
+    def splitters(self, local_sorted, ctx):
+        raise NotImplementedError("multistage overrides `sharded` directly")
+
+    def sharded(self, local, rng, ctx):
+        out, n_valid, ovf = two_stage_sort_sharded(
+            local, outer_axis=ctx.axis_names[0], inner_axis=ctx.axis_names[1],
+            r1=ctx.sizes[0], r2=ctx.sizes[1], rng=rng,
+            hss_cfg=ctx.hss_cfg, ex_cfg=ctx.ex_cfg)
+        m = jnp.zeros((0,), jnp.int32)
+        return (out, n_valid, jnp.zeros((0,), local.dtype), m, ovf,
+                null_stats())

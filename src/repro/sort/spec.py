@@ -1,0 +1,96 @@
+"""SortSpec: the single configuration object of the `repro.sort` front-door.
+
+One spec consolidates what used to be spread over `HSSConfig`,
+`ExchangeConfig` and per-algorithm driver kwargs (`hss_sort`, `sample_sort`,
+`ams_sort`, `two_stage_sort` each had their own). The spec is a frozen
+dataclass so it can be shared, logged, and swept in benchmarks; `repro.sort`
+translates it into the legacy config objects at the core boundary.
+
+    from repro.sort import SortSpec, sort
+    out = sort(x, SortSpec(algorithm="hss", eps=0.05, exchange="allgather"))
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.core.common import HSSConfig
+from repro.core.exchange import ExchangeConfig
+
+ALGORITHMS = ("hss", "sample_random", "sample_regular", "ams", "multistage")
+
+
+@dataclasses.dataclass(frozen=True)
+class SortSpec:
+    """Everything the unified `sort()`/`argsort()`/`sort_kv()` surface needs.
+
+    Algorithm selection:
+      algorithm      one of ALGORITHMS (see repro.sort.partitioners registry).
+      eps            load-balance slack: each output shard <= (1+eps) N/p keys.
+
+    Splitter determination (HSS + multistage; see HSSConfig):
+      rounds, sample_per_shard, adaptive — forwarded to HSSConfig.
+      total_sample   sample_random / ams: overall sample-size override.
+      s              sample_regular (PSRS): per-shard sample size override.
+
+    Exchange (see ExchangeConfig):
+      exchange       "dense" | "ragged" | "allgather".
+      pair_factor    dense: per-(src,dst) capacity multiplier.
+      out_slack      output-buffer slack on the (1+eps) capacity.
+
+    Placement:
+      mesh           jax Mesh to sort over (None => 1-D mesh over all devices).
+      axis_name      mesh axis of 1-D algorithms.
+      outer_axis / inner_axis  multistage: the two nested mesh axes. When
+                     `mesh` is None the driver factors p into (r1, r2) itself.
+
+    Semantics:
+      stable         True => implicit duplicate tagging (paper Sec. 6.3) is
+                     applied so equal keys keep input order and original
+                     indices travel with the keys. `argsort`/`sort_kv` force
+                     this on. False + tag=None still auto-tags when the input
+                     is detected to contain duplicates.
+      tag            tri-state tagging override: None = auto (tag when stable,
+                     when indices are required, or when duplicates are
+                     detected), True = always, False = never (caller asserts
+                     distinct keys). Auto-detection costs one single-placement
+                     O(n log n) device sort up front — at production scale
+                     pass an explicit True/False instead.
+      seed           PRNG seed for the sampling rounds.
+      initial_probes warm-start probes (the ChaNGa trick, paper Sec. 7.3).
+      local_sort_fn  local-sort kernel override (e.g. the Pallas bitonic sort).
+    """
+
+    algorithm: str = "hss"
+    eps: float = 0.05
+    # splitter determination
+    rounds: int = 0
+    sample_per_shard: int = 0
+    adaptive: bool = True
+    total_sample: int | None = None
+    s: int | None = None
+    # exchange
+    exchange: str = "dense"
+    pair_factor: float = 3.0
+    out_slack: float = 1.0
+    # placement
+    mesh: Any = None
+    axis_name: str = "sort"
+    outer_axis: str = "outer"
+    inner_axis: str = "inner"
+    # semantics
+    stable: bool = False
+    tag: bool | None = None
+    seed: int = 0
+    initial_probes: Any = None
+    local_sort_fn: Any = None
+
+    def hss_config(self) -> HSSConfig:
+        return HSSConfig(eps=self.eps, rounds=self.rounds,
+                         sample_per_shard=self.sample_per_shard,
+                         adaptive=self.adaptive, out_slack=self.out_slack)
+
+    def exchange_config(self) -> ExchangeConfig:
+        return ExchangeConfig(strategy=self.exchange,
+                              pair_factor=self.pair_factor,
+                              out_slack=self.out_slack)

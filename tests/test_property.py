@@ -11,6 +11,9 @@ and on the simulator:
 """
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import ExchangeConfig, HSSConfig, gather_sorted, hss_sort
