@@ -1,6 +1,15 @@
-"""Kernel-layer microbench: Pallas (interpret on CPU) numerics cross-check +
-wall time of the jnp oracles at sort-shard sizes (the quantity that scales to
-the TPU kernels; interpret-mode timing is not hardware-representative)."""
+"""Kernel-layer microbench: every Pallas kernel timed *compiled* against its
+XLA oracle at sort-shard sizes, plus a numerics cross-check.
+
+On CPU the kernels execute in interpret mode — the kernel body is traced to
+XLA ops and jit-compiled, so the timings are real wall times of a compiled
+artifact (they characterize the dataflow, not Mosaic codegen; on TPU the
+same rows time the Mosaic kernels). Sizes are chosen to keep interpret-mode
+trace/compile in seconds while staying at a representative shard scale.
+
+Rows feed `BENCH_kernels.json` (written by benchmarks/run.py at the repo
+root), one timed row per kernel: local_sort, merge_runs, probe_ranks.
+"""
 from __future__ import annotations
 
 import numpy as np
@@ -8,28 +17,55 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import timeit
+from repro.kernels import dispatch
 from repro.kernels.bitonic_sort import ops as bops
 from repro.kernels.histogram import ops as hops
 from repro.kernels.histogram import ref as href
+from repro.kernels.merge import ops as mops
+from repro.kernels.merge import ref as mref
 
 
 def run():
     rows = []
     rng = np.random.default_rng(0)
-    x = jnp.asarray(rng.standard_normal(1 << 16).astype(np.float32))
+    backend = jax.default_backend()
+    mode = "mosaic" if backend == "tpu" else "interpret"
+    n = 1 << 13                      # 8192-key shard
 
-    us_ref = timeit(jax.jit(jnp.sort), x)
-    rows.append(("kernels/xla_sort_64k", round(us_ref, 1), "oracle"))
-    got = bops.block_sort(x[:4096], block=1024, interpret=True)
-    ok = bool(jnp.all(got.reshape(4, 1024)[:, 1:] >= got.reshape(4, 1024)[:, :-1]))
-    rows.append(("kernels/bitonic_block_sort", None,
-                 f"interpret-mode allclose={ok} (TPU target kernel)"))
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
 
-    probes = jnp.sort(x[::256])
-    us_h = timeit(jax.jit(lambda k, p: href.probe_ranks_ref(k, p)), x, probes)
-    rows.append(("kernels/histogram_ref_64k_x256", round(us_h, 1), "oracle"))
-    got = hops.probe_ranks(x[:8192], probes, tile=512, interpret=True)
-    want = href.probe_ranks_ref(x[:8192], probes)
-    rows.append(("kernels/histogram_kernel", None,
-                 f"interpret-mode equal={bool(jnp.all(got == want))}"))
+    # ---- local_sort: kernel block sort + merge cascade vs jnp.sort
+    us = timeit(lambda v: bops.local_sort(v, block=256), x)
+    ok = bool(jnp.all(bops.local_sort(x, block=256) == jnp.sort(x)))
+    rows.append((f"kernels/local_sort_8k_{mode}", round(us, 1),
+                 f"pallas block=256 equal={ok}"))
+    us = timeit(jax.jit(jnp.sort), x)
+    rows.append(("kernels/local_sort_8k_xla", round(us, 1), "oracle jnp.sort"))
+
+    # ---- merge_runs: 16-way post-exchange merge vs full re-sort
+    runs = jnp.asarray(np.sort(
+        rng.standard_normal((16, n // 16)).astype(np.float32), axis=1))
+    us = timeit(lambda r: mops.merge_sorted_runs(r), runs)
+    ok = bool(jnp.all(mops.merge_sorted_runs(runs)
+                      == mref.merge_sorted_runs_ref(runs)))
+    rows.append((f"kernels/merge_runs_16x512_{mode}", round(us, 1),
+                 f"pallas merge tree equal={ok}"))
+    us = timeit(jax.jit(mref.merge_sorted_runs_ref), runs)
+    rows.append(("kernels/merge_runs_16x512_xla", round(us, 1),
+                 "oracle jnp.sort over the flattened runs"))
+
+    # ---- probe_ranks: tiled comparison reduction vs searchsorted
+    probes = jnp.sort(x[::64])       # 128 probes, the per-round HSS scale
+    us = timeit(lambda k, p: hops.probe_ranks(k, p), x, probes)
+    ok = bool(jnp.all(hops.probe_ranks(x, probes)
+                      == href.probe_ranks_ref(x, probes)))
+    rows.append((f"kernels/probe_ranks_8k_x128_{mode}", round(us, 1),
+                 f"pallas count kernel equal={ok}"))
+    us = timeit(jax.jit(href.probe_ranks_ref), x, probes)
+    rows.append(("kernels/probe_ranks_8k_x128_xla", round(us, 1),
+                 "oracle sort+searchsorted"))
+
+    # ---- dispatch: what "auto" picks here (the row the trajectory tracks)
+    rows.append(("kernels/dispatch_auto", None,
+                 f"backend={backend} -> {dispatch.resolve_policy('auto')}"))
     return rows

@@ -14,11 +14,15 @@ import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import argparse
+import json
+import pathlib
 import sys
 import time
 import traceback
 
 from benchmarks.common import emit
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 BENCHES = [
     ("table2", "benchmarks.bench_table2_complexity"),
@@ -37,6 +41,21 @@ BENCHES = [
 ]
 
 
+def _write_json(fname: str, bench: str, rows) -> None:
+    """Machine-readable bench snapshot at the repo root (the perf-trajectory
+    artifact: committed per change, uploaded by CI)."""
+    import jax
+    payload = {
+        "bench": bench,
+        "generated": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "rows": [{"name": name, "us_per_call": us, "derived": derived}
+                 for name, us, derived in rows],
+    }
+    (REPO_ROOT / fname).write_text(json.dumps(payload, indent=2) + "\n")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
@@ -53,6 +72,8 @@ def main() -> None:
             mod = importlib.import_module(module)
             rows = mod.run()
             emit(rows)
+            if key == "kernels":
+                _write_json("BENCH_kernels.json", key, rows)
             print(f"# {key}: {time.time()-t0:.1f}s", flush=True)
         except Exception:
             failures += 1

@@ -1,10 +1,11 @@
 """Single-stage AMS sort baseline (paper Section 3.6, Appendix A).
 
 One Bernoulli sampling round, one histogramming round (exact probe ranks via
-psum'd searchsorted, same machinery as HSS), then the *scanning algorithm*:
-greedily assign maximal runs of sample buckets to consecutive processors so no
-processor exceeds (1+eps)N/p. Achieves a locally-balanced (not globally
-balanced) splitting with a Theta(p(log p + 1/eps)) sample (Lemma A.1).
+psum'd per-shard rank vectors — the kernel-dispatched histogram, same
+machinery as HSS), then the *scanning algorithm*: greedily assign maximal
+runs of sample buckets to consecutive processors so no processor exceeds
+(1+eps)N/p. Achieves a locally-balanced (not globally balanced) splitting
+with a Theta(p(log p + 1/eps)) sample (Lemma A.1).
 """
 from __future__ import annotations
 
@@ -17,6 +18,7 @@ import jax.random as jr
 from repro.core.common import hi_sentinel, round_up
 from repro.core.exchange import ExchangeConfig, exchange
 from repro.core.hss import SortResult, _driver
+from repro.kernels import dispatch
 
 
 def ams_sample_size(p: int, eps: float, n: int) -> int:
@@ -49,7 +51,7 @@ def scanning_splitters(probes, probe_ranks, *, p, n, eps):
 
 
 def ams_splitters(local_sorted, *, axis_name, p, rng, eps=0.05,
-                  total_sample=None):
+                  total_sample=None, kernel_policy="auto"):
     """Splitter determination only: one sampling round + the scanning pass.
 
     Returns (splitter_keys, splitter_ranks, sample_overflow, ok). Shared by
@@ -64,37 +66,43 @@ def ams_splitters(local_sorted, *, axis_name, p, rng, eps=0.05,
     u = jr.uniform(rng, (n_local,))
     mask = u < prob
     n_hit = jnp.sum(mask.astype(jnp.int32))
-    vals = jnp.sort(jnp.where(mask, local_sorted,
-                              hi_sentinel(local_sorted.dtype)))[:cap]
+    vals = dispatch.local_sort(
+        jnp.where(mask, local_sorted, hi_sentinel(local_sorted.dtype)),
+        policy=kernel_policy)[:cap]
     ovf = jax.lax.psum(jnp.maximum(n_hit - cap, 0), axis_name)
-    probes = jnp.sort(jax.lax.all_gather(vals, axis_name, tiled=True))
+    probes = dispatch.local_sort(
+        jax.lax.all_gather(vals, axis_name, tiled=True), policy=kernel_policy)
     ranks = jax.lax.psum(
-        jnp.searchsorted(local_sorted, probes, side="left").astype(jnp.int32),
+        dispatch.probe_ranks(local_sorted, probes, policy=kernel_policy,
+                             assume_sorted=True),
         axis_name)
     keys, kranks, ok = scanning_splitters(probes, ranks, p=p, n=n, eps=eps)
     return keys, kranks, ovf, ok
 
 
 def ams_sort_sharded(local, *, axis_name, p, rng, eps=0.05, total_sample=None,
-                     ex_cfg: ExchangeConfig | None = None):
-    ex_cfg = ex_cfg or ExchangeConfig()
-    local_sorted = jnp.sort(local)
+                     ex_cfg: ExchangeConfig | None = None,
+                     kernel_policy="auto"):
+    ex_cfg = ex_cfg or ExchangeConfig(kernel_policy=kernel_policy)
+    local_sorted = dispatch.local_sort(local, policy=kernel_policy)
     keys, kranks, ovf, ok = ams_splitters(
         local_sorted, axis_name=axis_name, p=p, rng=rng, eps=eps,
-        total_sample=total_sample)
+        total_sample=total_sample, kernel_policy=kernel_policy)
     out, n_valid, ex_ovf = exchange(
         local_sorted, keys, axis_name=axis_name, p=p, cfg=ex_cfg, eps=eps)
     return out, n_valid, keys, kranks, ovf + ex_ovf, ok
 
 
 def ams_sort(x, mesh=None, axis_name="sort", seed=0, eps=0.05,
-             total_sample=None, ex_cfg: ExchangeConfig | None = None) -> SortResult:
+             total_sample=None, ex_cfg: ExchangeConfig | None = None,
+             kernel_policy="auto") -> SortResult:
     p = len(mesh.devices.reshape(-1)) if mesh is not None else len(jax.devices())
 
     def sort_fn(local, rng):
         o, nv, k, r, ov, ok = ams_sort_sharded(
             local, axis_name=axis_name, p=p, rng=rng, eps=eps,
-            total_sample=total_sample, ex_cfg=ex_cfg)
+            total_sample=total_sample, ex_cfg=ex_cfg,
+            kernel_policy=kernel_policy)
         from repro.core.splitters import SplitterStats
         stats = SplitterStats(
             gamma_size=jnp.zeros((1,), jnp.int32),
@@ -104,4 +112,5 @@ def ams_sort(x, mesh=None, axis_name="sort", seed=0, eps=0.05,
             rounds_used=jnp.int32(1))
         return o, nv, k, r, ov, stats
 
-    return _driver(sort_fn, x, mesh, axis_name, seed)
+    return _driver(sort_fn, x, mesh, axis_name, seed,
+                   local_sort_fn=dispatch.local_sort_fn(kernel_policy))

@@ -35,6 +35,10 @@ def round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+def pow2_ceil(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
 def cdiv(a: int, b: int) -> int:
     return (a + b - 1) // b
 
@@ -71,6 +75,10 @@ class HSSConfig:
         fixed ratios s_j = (2 ln p / eps)^{j/k}.
     out_slack:
         output-buffer slack multiplier on (1+eps)*N/p for the exchanged shard.
+    kernel_policy:
+        compute-backend selection for the local sort, sample sorts, and
+        probe ranking: "auto" (Pallas kernels on TPU, XLA elsewhere),
+        "pallas", or "xla" (repro.kernels.dispatch, DESIGN.md Section 2.5).
     """
 
     eps: float = 0.05
@@ -78,6 +86,7 @@ class HSSConfig:
     sample_per_shard: int = 0
     adaptive: bool = True
     out_slack: float = 1.0
+    kernel_policy: str = "auto"
 
     def resolved_rounds(self, p: int) -> int:
         return self.rounds if self.rounds > 0 else auto_rounds(p, self.eps)

@@ -17,6 +17,14 @@ All strategies return a sentinel-padded, locally sorted output shard of static
 shape (out_cap,) plus the valid-key count. HSS's globally balanced splitting
 guarantees valid <= (1+eps) * N/p, which is what makes a static out_cap sound
 (this is the paper's epsilon doing real work on TPU: it bounds the buffers).
+
+Every strategy receives p *already sorted* runs, so the post-exchange merge
+is a k-way merge (repro.kernels.dispatch.merge_runs / merge_ragged —
+log(p) kernel-resident streaming passes), not a from-scratch re-sort:
+dense hands the merge p
+runs of pair_cap, ragged hands it runs at the received offsets, allgather
+hands it the kept window of each source shard. `ExchangeConfig.kernel_policy`
+selects the merge backend (Pallas kernels vs the XLA oracle).
 """
 from __future__ import annotations
 
@@ -28,17 +36,38 @@ import jax.numpy as jnp
 from repro.core.common import hi_sentinel, round_up
 
 
+def _kernels():
+    """Deferred: repro.kernels modules import repro.core.common, whose
+    package init imports this module — resolve at trace time instead."""
+    from repro.kernels import dispatch
+    from repro.kernels.merge.ops import gather_runs
+    return dispatch, gather_runs
+
+
 @dataclasses.dataclass(frozen=True)
 class ExchangeConfig:
     strategy: str = "dense"      # dense | ragged | allgather
     pair_factor: float = 3.0      # dense: per-(src,dst) capacity = factor*n/p
     out_slack: float = 1.0        # extra slack on the (1+eps) output capacity
+    kernel_policy: str = "auto"   # post-exchange merge backend (dispatch)
 
     def pair_cap(self, n_local: int, p: int) -> int:
         return min(n_local, round_up(max(8, int(self.pair_factor * n_local / p)), 8))
 
     def out_cap(self, n_local: int, p: int, eps: float) -> int:
         return round_up(int((1.0 + eps) * self.out_slack * n_local) + 8, 8)
+
+    def ragged_slot(self, n_local: int, p: int, eps: float) -> int:
+        """Static per-run capacity of the ragged merge tree: double the
+        balanced per-pair load. Runs that exceed it (splitting violated its
+        eps guarantee) divert to the in-kernel full-sort fallback."""
+        return min(n_local, max(16, int(2.0 * (1.0 + eps) * n_local / p)))
+
+
+def _cap_to(merged, out_cap):
+    """Slice/pad a merged run to the static output capacity."""
+    from repro.kernels.merge.ops import cap_to
+    return cap_to(merged, out_cap)
 
 
 def destination_slices(local_sorted: jax.Array, splitter_keys: jax.Array,
@@ -75,13 +104,10 @@ def exchange_dense(local_sorted, splitter_keys, *, axis_name, p, cfg, eps,
                               tiled=False)
     recv_counts = jax.lax.all_to_all(
         sent_counts.reshape(p, 1), axis_name, 0, 0, tiled=False).reshape(p)
-    merged = jnp.sort(recv.reshape(-1))
-    total = p * cap
-    if total >= out_cap:
-        out = merged[:out_cap]
-    else:
-        out = jnp.concatenate(
-            [merged, jnp.full((out_cap - total,), sent_hi, merged.dtype)])
+    # p sorted sentinel-tailed runs of cap keys -> one k-way merge.
+    dispatch, _ = _kernels()
+    merged = dispatch.merge_runs(recv, policy=cfg.kernel_policy)
+    out = _cap_to(merged, out_cap)
     n_recv = jnp.sum(recv_counts)
     # Receive-side truncation (only possible when the splitting violated its
     # eps guarantee, e.g. an undersized sample-sort sample) is overflow too.
@@ -94,23 +120,32 @@ def exchange_allgather(local_sorted, splitter_keys, *, axis_name, p, cfg, eps,
                        n_valid=None):
     n = local_sorted.shape[0]
     out_cap = cfg.out_cap(n, p, eps)
-    sent_hi = hi_sentinel(local_sorted.dtype)
     me = jax.lax.axis_index(axis_name)
 
     everything = jax.lax.all_gather(local_sorted, axis_name, tiled=True)
-    real = everything != sent_hi
-    if n_valid is not None:
-        pos = jnp.arange(n, dtype=jnp.int32)
-        real_local = pos < jnp.asarray(n_valid, jnp.int32)
-        real = jax.lax.all_gather(real_local, axis_name, tiled=True)
-    lo = jnp.where(me > 0, splitter_keys[jnp.maximum(me - 1, 0)],
-                   local_sorted.dtype.type(0))
-    keep_lo = jnp.where(me > 0, everything >= lo, jnp.ones_like(everything, bool))
-    keep_hi = jnp.where(me < p - 1, everything < splitter_keys[jnp.minimum(me, p - 2)],
-                        jnp.ones_like(everything, bool))
-    keep = keep_lo & keep_hi & real
-    n_out = jnp.sum(keep.astype(jnp.int32))
-    vals = jnp.sort(jnp.where(keep, everything, sent_hi))[:out_cap]
+    nv_local = jnp.asarray(n if n_valid is None else n_valid, jnp.int32)
+    nv = jax.lax.all_gather(nv_local[None], axis_name, tiled=True)   # (p,)
+    rows = everything.reshape(p, n)
+    # My key range [lo, hi) is a contiguous window of each (sorted) source
+    # run: two vmapped binary searches per run, not an O(p*n) mask.
+    lo = splitter_keys[jnp.maximum(me - 1, 0)]
+    hi = splitter_keys[jnp.minimum(me, p - 2)]
+    a = jax.vmap(lambda r: jnp.searchsorted(r, lo, side="left"))(rows)
+    b = jax.vmap(lambda r: jnp.searchsorted(r, hi, side="left"))(rows)
+    a = jnp.where(me > 0, a.astype(jnp.int32), 0)
+    b = jnp.where(me < p - 1, b.astype(jnp.int32), n)
+    ends = jnp.minimum(b, nv)
+    starts = jnp.minimum(a, ends)
+    counts = ends - starts
+    n_out = jnp.sum(counts)
+
+    dispatch, gather_runs = _kernels()
+    flat_starts = jnp.arange(p, dtype=jnp.int32) * n + starts
+    # slot = n bounds every window exactly (a source can contribute at most
+    # its whole run); merge_runs pads the row length internally as needed.
+    runs = gather_runs(everything, flat_starts, counts, n)
+    merged = dispatch.merge_runs(runs, policy=cfg.kernel_policy)
+    vals = _cap_to(merged, out_cap)
     trunc = jnp.maximum(n_out - out_cap, 0)
     return vals, n_out - trunc, jax.lax.psum(trunc, axis_name)
 
@@ -138,9 +173,12 @@ def exchange_ragged(local_sorted, splitter_keys, *, axis_name, p, cfg, eps,
         send_offsets.astype(jnp.int64), recv_counts.astype(jnp.int64),
         axis_name=axis_name)
     n_valid = jnp.sum(recv_counts)
-    # Received p sorted runs at known offsets; a full sort merges them (the
-    # run structure is also exploitable by the bitonic merge kernel).
-    out = jnp.sort(out)
+    # p sorted runs at known (traced) offsets: k-way merge, with the
+    # in-kernel full-sort fallback if a run overflows the static slot.
+    dispatch, _ = _kernels()
+    out = dispatch.merge_ragged(
+        out, recv_offsets, recv_counts, policy=cfg.kernel_policy,
+        slot=cfg.ragged_slot(n, p, eps))
     return out, n_valid, jnp.zeros((), jnp.int32)
 
 

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from repro.core.common import HSSConfig
 from repro.core.exchange import ExchangeConfig, exchange
 from repro.core.splitters import SplitterStats, hss_splitters
+from repro.kernels import dispatch
 
 
 class SortResult(NamedTuple):
@@ -38,16 +39,20 @@ def hss_sort_sharded(
     hss_cfg: HSSConfig | None = None,
     ex_cfg: ExchangeConfig | None = None,
     initial_probes: jax.Array | None = None,
-    local_sort_fn=jnp.sort,
+    local_sort_fn=None,
 ):
     """Sort a distributed array; call inside shard_map over `axis_name`.
 
     local: this shard's (n_local,) keys (unsorted). Returns the same tuple as
     SortResult but with per-shard leading dims stripped (out_cap,), scalar
-    count, replicated splitters/stats.
+    count, replicated splitters/stats. local_sort_fn=None routes the local
+    sort through repro.kernels.dispatch under hss_cfg.kernel_policy (the
+    Pallas bitonic cascade on TPU, jnp.sort on the XLA path).
     """
     hss_cfg = hss_cfg or HSSConfig()
-    ex_cfg = ex_cfg or ExchangeConfig()
+    ex_cfg = ex_cfg or ExchangeConfig(kernel_policy=hss_cfg.kernel_policy)
+    if local_sort_fn is None:
+        local_sort_fn = dispatch.local_sort_fn(hss_cfg.kernel_policy)
     local_sorted = local_sort_fn(local)
     if p == 1:
         return (local_sorted, jnp.int32(local.shape[0]),
@@ -62,7 +67,7 @@ def hss_sort_sharded(
     return out, n_valid, keys, ranks, ovf, stats
 
 
-def _driver(sort_fn, x, mesh, axis_name, seed):
+def _driver(sort_fn, x, mesh, axis_name, seed, local_sort_fn=None):
     """Back-compat shim over the shared driver (repro.sort.driver.run).
 
     Kept so the legacy per-algorithm entry points (`hss_sort`, `sample_sort`,
@@ -72,7 +77,8 @@ def _driver(sort_fn, x, mesh, axis_name, seed):
     """
     from repro.sort import driver as sort_driver
     return SortResult(*sort_driver.run(
-        sort_fn, x, mesh=mesh, axis_names=(axis_name,), seed=seed))
+        sort_fn, x, mesh=mesh, axis_names=(axis_name,), seed=seed,
+        local_sort_fn=local_sort_fn))
 
 
 def hss_sort(
@@ -83,11 +89,11 @@ def hss_sort(
     ex_cfg: ExchangeConfig | None = None,
     seed: int = 0,
     initial_probes: jax.Array | None = None,
-    local_sort_fn=jnp.sort,
+    local_sort_fn=None,
 ) -> SortResult:
     """Sort a 1-D array across all devices of `mesh` (default: all devices)."""
     hss_cfg = hss_cfg or HSSConfig()
-    ex_cfg = ex_cfg or ExchangeConfig()
+    ex_cfg = ex_cfg or ExchangeConfig(kernel_policy=hss_cfg.kernel_policy)
     p = len(mesh.devices.reshape(-1)) if mesh is not None else len(jax.devices())
 
     def sort_fn(local, rng):
@@ -96,7 +102,8 @@ def hss_sort(
             ex_cfg=ex_cfg, initial_probes=initial_probes,
             local_sort_fn=local_sort_fn)
 
-    return _driver(sort_fn, x, mesh, axis_name, seed)
+    p1_sort = local_sort_fn or dispatch.local_sort_fn(hss_cfg.kernel_policy)
+    return _driver(sort_fn, x, mesh, axis_name, seed, local_sort_fn=p1_sort)
 
 
 def gather_sorted(result: SortResult):

@@ -11,11 +11,14 @@ Generalizes hss_splitters via num_parts != num_shards and a traced n_valid
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import jax.random as jr
 
 from repro.core.common import HSSConfig, hi_sentinel
+from repro.kernels import dispatch
 from repro.core.exchange import ExchangeConfig, exchange
 from repro.core.splitters import (
     SplitterState, choose_splitters, init_state, refine, active_union_size,
@@ -59,10 +62,15 @@ def hss_splitters_general(
         key, sub = jr.split(key)
         gamma = active_union_size(state, targets)
         prob = jnp.minimum(1.0, f_total / jnp.maximum(gamma, 1).astype(jnp.float32))
-        vals, n_samp, ovf = _sample_round(local_sorted, state, prob, cap, sub)
-        probes = jnp.sort(jax.lax.all_gather(vals, axis_names, tiled=True))
-        local_ranks = jnp.searchsorted(local_sorted, probes, side="left")
-        ranks = jax.lax.psum(local_ranks.astype(jnp.int32), axis_names)
+        vals, n_samp, ovf = _sample_round(local_sorted, state, prob, cap, sub,
+                                          kernel_policy=cfg.kernel_policy)
+        probes = dispatch.local_sort(
+            jax.lax.all_gather(vals, axis_names, tiled=True),
+            policy=cfg.kernel_policy)
+        local_ranks = dispatch.probe_ranks(local_sorted, probes,
+                                           policy=cfg.kernel_policy,
+                                           assume_sorted=True)
+        ranks = jax.lax.psum(local_ranks, axis_names)
         state = refine(state, probes, ranks, targets, tol)
         return (state, key), (gamma, jax.lax.psum(n_samp, axis_names),
                               jax.lax.psum(ovf, axis_names))
@@ -80,17 +88,15 @@ def two_stage_sort_sharded(
 ):
     """shard_map-resident two-stage HSS sort over a (r1, r2) mesh."""
     hss_cfg = hss_cfg or HSSConfig()
-    ex_cfg = ex_cfg or ExchangeConfig()
-    local_sorted = jnp.sort(local)
+    ex_cfg = ex_cfg or ExchangeConfig(kernel_policy=hss_cfg.kernel_policy)
+    local_sorted = dispatch.local_sort(local, policy=hss_cfg.kernel_policy)
     rng1, rng2 = jr.split(rng)
 
     # ---- stage 1: split into r1 groups, exchange along the outer axis only.
     g_keys, _, _ = hss_splitters_general(
         local_sorted, axis_names=(outer_axis, inner_axis),
         num_shards=r1 * r2, num_parts=r1, cfg=hss_cfg, rng=rng1)
-    ex1 = ExchangeConfig(strategy=ex_cfg.strategy,
-                         pair_factor=ex_cfg.pair_factor,
-                         out_slack=stage1_out_slack)
+    ex1 = dataclasses.replace(ex_cfg, out_slack=stage1_out_slack)
     mid, mid_valid, ovf1 = exchange(
         local_sorted, g_keys, axis_name=outer_axis, p=r1, cfg=ex1,
         eps=hss_cfg.eps)
@@ -118,6 +124,7 @@ def two_stage_sort(x, mesh, outer_axis="outer", inner_axis="inner", seed=0,
     """
     from repro.sort import driver as sort_driver
     r1, r2 = mesh.shape[outer_axis], mesh.shape[inner_axis]
+    policy = (hss_cfg or HSSConfig()).kernel_policy
 
     def sort_fn(local, rng):
         out, n_valid, ovf = two_stage_sort_sharded(
@@ -127,5 +134,6 @@ def two_stage_sort(x, mesh, outer_axis="outer", inner_axis="inner", seed=0,
                 jnp.zeros((0,), jnp.int32), ovf, jnp.zeros((0,), jnp.int32))
 
     out, counts, _, _, ovf, _ = sort_driver.run(
-        sort_fn, x, mesh=mesh, axis_names=(outer_axis, inner_axis), seed=seed)
+        sort_fn, x, mesh=mesh, axis_names=(outer_axis, inner_axis), seed=seed,
+        local_sort_fn=dispatch.local_sort_fn(policy))
     return out.reshape(r1, r2, -1), counts.reshape(r1, r2), ovf

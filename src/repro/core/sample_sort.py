@@ -5,7 +5,9 @@ Two splitter-determination schemes with the three-phase skeleton:
   * regular sampling (Shi & Schaeffer PSRS; Theorem 3.2 — O(p^2 / eps) sample)
 
 Both are implemented with the same shard_map-resident conventions as HSS so the
-benchmarks compare only the partitioning strategy (the exchange is shared).
+benchmarks compare only the partitioning strategy (the exchange is shared, and
+all sorting — local shards, sample buffers, gathered probes — routes through
+repro.kernels.dispatch under `kernel_policy`).
 """
 from __future__ import annotations
 
@@ -18,6 +20,7 @@ import jax.random as jr
 from repro.core.common import hi_sentinel, round_up
 from repro.core.exchange import ExchangeConfig, exchange
 from repro.core.hss import SortResult, _driver
+from repro.kernels import dispatch
 
 
 def default_total_sample(p: int, n_local: int, eps: float) -> int:
@@ -31,7 +34,7 @@ def default_regular_s(p: int, eps: float) -> int:
 
 
 def random_sample_splitters(local_sorted, *, axis_name, p, total_sample, rng,
-                            cap=None):
+                            cap=None, kernel_policy="auto"):
     """p-1 splitters = evenly spaced keys of a Bernoulli sample of target size."""
     n_local = local_sorted.shape[0]
     cap = cap or round_up(max(8, int(3.0 * total_sample / p)), 8)
@@ -39,39 +42,46 @@ def random_sample_splitters(local_sorted, *, axis_name, p, total_sample, rng,
     u = jr.uniform(rng, (n_local,))
     mask = u < prob
     n_hit = jnp.sum(mask.astype(jnp.int32))
-    vals = jnp.sort(jnp.where(mask, local_sorted, hi_sentinel(local_sorted.dtype)))[:cap]
+    vals = dispatch.local_sort(
+        jnp.where(mask, local_sorted, hi_sentinel(local_sorted.dtype)),
+        policy=kernel_policy)[:cap]
     overflow = jax.lax.psum(jnp.maximum(n_hit - cap, 0), axis_name)
-    probes = jnp.sort(jax.lax.all_gather(vals, axis_name, tiled=True))
+    probes = dispatch.local_sort(
+        jax.lax.all_gather(vals, axis_name, tiled=True), policy=kernel_policy)
     n_valid = jax.lax.psum(jnp.minimum(n_hit, cap), axis_name)
     idx = (jnp.arange(1, p, dtype=jnp.int32) * n_valid) // p
     return jnp.take(probes, idx), overflow
 
 
-def regular_sample_splitters(local_sorted, *, axis_name, p, s):
+def regular_sample_splitters(local_sorted, *, axis_name, p, s,
+                             kernel_policy="auto"):
     """PSRS: s evenly spaced local keys per shard; splitters evenly spaced in the
     merged p*s sample. Deterministic (Theorem 3.2: s = p/eps for (1+eps))."""
     n_local = local_sorted.shape[0]
     idx = ((jnp.arange(s, dtype=jnp.int32) + 1) * n_local) // (s + 1)
     vals = local_sorted[idx]
-    probes = jnp.sort(jax.lax.all_gather(vals, axis_name, tiled=True))
+    probes = dispatch.local_sort(
+        jax.lax.all_gather(vals, axis_name, tiled=True), policy=kernel_policy)
     sidx = (jnp.arange(1, p, dtype=jnp.int32) * (s * p)) // p
     return probes[sidx]
 
 
 def sample_sort_sharded(local, *, axis_name, p, rng, method="random",
                         total_sample=None, s=None, eps=0.05,
-                        ex_cfg: ExchangeConfig | None = None):
-    ex_cfg = ex_cfg or ExchangeConfig()
-    local_sorted = jnp.sort(local)
+                        ex_cfg: ExchangeConfig | None = None,
+                        kernel_policy="auto"):
+    ex_cfg = ex_cfg or ExchangeConfig(kernel_policy=kernel_policy)
+    local_sorted = dispatch.local_sort(local, policy=kernel_policy)
     n_local = local.shape[0]
     if method == "random":
         total_sample = total_sample or default_total_sample(p, n_local, eps)
         keys, ovf = random_sample_splitters(
             local_sorted, axis_name=axis_name, p=p, total_sample=total_sample,
-            rng=rng)
+            rng=rng, kernel_policy=kernel_policy)
     elif method == "regular":
         s = s or default_regular_s(p, eps)
-        keys = regular_sample_splitters(local_sorted, axis_name=axis_name, p=p, s=s)
+        keys = regular_sample_splitters(local_sorted, axis_name=axis_name, p=p,
+                                        s=s, kernel_policy=kernel_policy)
         ovf = jnp.zeros((), jnp.int32)
     else:
         raise ValueError(method)
@@ -82,16 +92,19 @@ def sample_sort_sharded(local, *, axis_name, p, rng, method="random",
 
 def sample_sort(x, mesh=None, axis_name="sort", method="random", seed=0,
                 total_sample=None, s=None, eps=0.05,
-                ex_cfg: ExchangeConfig | None = None) -> SortResult:
+                ex_cfg: ExchangeConfig | None = None,
+                kernel_policy="auto") -> SortResult:
     p = len(mesh.devices.reshape(-1)) if mesh is not None else len(jax.devices())
 
     def sort_fn(local, rng):
         out = sample_sort_sharded(
             local, axis_name=axis_name, p=p, rng=rng, method=method,
-            total_sample=total_sample, s=s, eps=eps, ex_cfg=ex_cfg)
+            total_sample=total_sample, s=s, eps=eps, ex_cfg=ex_cfg,
+            kernel_policy=kernel_policy)
         o, nv, k, r, ov, _ = out
         zstats = tuple(jnp.zeros((1,), jnp.int32) for _ in range(4)) + (jnp.int32(1),)
         from repro.core.splitters import SplitterStats
         return o, nv, k, r, ov, SplitterStats(*zstats)
 
-    return _driver(sort_fn, x, mesh, axis_name, seed)
+    return _driver(sort_fn, x, mesh, axis_name, seed,
+                   local_sort_fn=dispatch.local_sort_fn(kernel_policy))

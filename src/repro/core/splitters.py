@@ -13,8 +13,11 @@ TPU/JAX adaptation (DESIGN.md Section 2):
   * Bernoulli sampling uses fixed-capacity sentinel-padded sample buffers so
     all shapes are static; overflow is counted and surfaced;
   * rank bookkeeping is exact: the "histogram" is the vector of global ranks
-    of the probes (number of keys < probe), obtained by psum-ing local
-    searchsorted results over locally sorted shards.
+    of the probes (number of keys < probe), obtained by psum-ing local rank
+    vectors. The local ranking runs through repro.kernels.dispatch: the
+    Pallas probe-count kernel on TPU (it counts rather than searches, so it
+    can also rank shards that are not sorted yet), searchsorted over the
+    locally sorted shard on the XLA path — bit-identical results.
 
 Everything here runs *inside* shard_map over one mesh axis (`axis_name`).
 Pure helpers (refine, membership, choice) are also reused verbatim by the
@@ -36,6 +39,7 @@ from repro.core.common import (
     lo_sentinel,
     sampling_ratios,
 )
+from repro.kernels import dispatch
 
 
 class SplitterState(NamedTuple):
@@ -145,7 +149,7 @@ def choose_splitters(state: SplitterState, targets: jax.Array):
     return keys, ranks
 
 
-def _sample_round(local_sorted, state, prob, cap, rng):
+def _sample_round(local_sorted, state, prob, cap, rng, kernel_policy="auto"):
     """Bernoulli-sample active-interval keys into a fixed sentinel-padded buffer."""
     n_local = local_sorted.shape[0]
     in_g = gamma_membership(local_sorted, state)
@@ -153,7 +157,7 @@ def _sample_round(local_sorted, state, prob, cap, rng):
     mask = in_g & (u < prob)
     n_hit = jnp.sum(mask.astype(jnp.int32))
     vals = jnp.where(mask, local_sorted, hi_sentinel(local_sorted.dtype))
-    vals = jnp.sort(vals)[:cap]
+    vals = dispatch.local_sort(vals, policy=kernel_policy)[:cap]
     overflow = jnp.maximum(n_hit - cap, 0)
     return vals, n_hit - overflow, overflow
 
@@ -195,8 +199,9 @@ def hss_splitters(
     state0 = init_state(p, n, dtype)
     if initial_probes is not None:
         # Free warm-start: rank the provided probes once and refine.
-        lr = jnp.searchsorted(local_sorted, initial_probes, side="left")
-        pr = jax.lax.psum(lr.astype(jnp.int32), axis_name)
+        lr = dispatch.probe_ranks(local_sorted, initial_probes,
+                                  policy=cfg.kernel_policy, assume_sorted=True)
+        pr = jax.lax.psum(lr, axis_name)
         state0 = refine(state0, initial_probes, pr, targets, tol)
 
     def round_body(carry, j):
@@ -207,10 +212,15 @@ def hss_splitters(
             prob = jnp.minimum(1.0, f_total / jnp.maximum(gamma, 1).astype(jnp.float32))
         else:
             prob = jnp.minimum(1.0, ratios[j] / float(n_local))
-        vals, n_samp, ovf = _sample_round(local_sorted, state, prob, cap, sub)
-        probes = jnp.sort(jax.lax.all_gather(vals, axis_name, tiled=True))
-        local_ranks = jnp.searchsorted(local_sorted, probes, side="left")
-        ranks = jax.lax.psum(local_ranks.astype(jnp.int32), axis_name)
+        vals, n_samp, ovf = _sample_round(local_sorted, state, prob, cap, sub,
+                                          kernel_policy=cfg.kernel_policy)
+        probes = dispatch.local_sort(
+            jax.lax.all_gather(vals, axis_name, tiled=True),
+            policy=cfg.kernel_policy)
+        local_ranks = dispatch.probe_ranks(local_sorted, probes,
+                                           policy=cfg.kernel_policy,
+                                           assume_sorted=True)
+        ranks = jax.lax.psum(local_ranks, axis_name)
         state = refine(state, probes, ranks, targets, tol)
         stats = (
             gamma,

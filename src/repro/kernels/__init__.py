@@ -1,4 +1,4 @@
-"""Pallas TPU kernels for the sort hot spots (DESIGN.md Section 2.4).
+"""Pallas TPU kernels for the sort hot spots (DESIGN.md Sections 2.4-2.5).
 
 bitonic_sort  VMEM-tiled bitonic sorting/merging networks — the local-sort
               phase the paper delegates to std::sort, rebuilt as
@@ -7,4 +7,26 @@ bitonic_sort  VMEM-tiled bitonic sorting/merging networks — the local-sort
 histogram     probe-count kernel — the per-round histogram: counts of local
               keys below each probe via tiled comparison reduction (an MXU/VPU
               arithmetic-intensity trade vs. scalar binary searches).
+merge         k-way post-exchange merge — pairwise bitonic-merge tree over
+              already-sorted runs (equal-capacity, contiguous, or ragged at
+              traced offsets), with an HBM-resident strided pass above the
+              VMEM budget so the cascade never falls back to an XLA sort.
+dispatch      the backend/size-aware selection layer every core pipeline
+              routes through: `kernel_policy` = "auto" | "pallas" | "xla".
+
+Key contract (shared with repro.core.common): keys are NaN-free and never
+equal the dtype's hi sentinel. The compare-exchange networks are built on
+min/max, which propagate a float NaN into *both* lanes (destroying data
+where jnp.sort would sort it last) — the `repro.sort` front-door's IEEE-754
+bijection turns float keys into sortable ints before they reach the core,
+and raw-core callers must do the same. Within that contract every kernel is
+bit-identical to its XLA oracle.
 """
+import jax
+
+
+def interpret_default() -> bool:
+    """Whether Pallas kernels run in interpret mode by default: only a real
+    TPU compiles Mosaic kernels. The single source of truth — dispatch and
+    the per-kernel ops modules all resolve `interpret=None` through this."""
+    return jax.default_backend() != "tpu"

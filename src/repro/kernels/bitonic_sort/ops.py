@@ -1,9 +1,10 @@
 """jit'd wrappers around the bitonic kernels.
 
-`local_sort(x)` is the drop-in local-sort for the HSS pipeline
-(hss_sort(..., local_sort_fn=local_sort)): pad to a power of two with the hi
-sentinel, kernel-sort VMEM blocks, then log(n/B) pairwise merge passes.
-interpret=True on CPU (kernel body executes in Python), compiled Mosaic on TPU.
+`local_sort(x)` is the drop-in local-sort for the HSS pipeline (route it via
+`repro.kernels.dispatch.local_sort`, or pass it as `local_sort_fn`): pad to a
+power of two with the hi sentinel, kernel-sort VMEM blocks, then log(n/B)
+pairwise merge passes. interpret=True on CPU (kernel body executes in
+Python), compiled Mosaic on TPU.
 """
 from __future__ import annotations
 
@@ -12,22 +13,16 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.common import hi_sentinel
+from repro.core.common import hi_sentinel, pow2_ceil
+from repro.kernels import interpret_default as _interpret
 from repro.kernels.bitonic_sort import kernel as K
 
 # VMEM budget: a merge block of 2*MAX_RUN f32 keys (plus double buffering)
-# must fit VMEM; 64K keys = 256 KiB. Beyond that, merge passes fall back to
-# a jnp merge (still O(n log n) total work, just not kernel-resident).
+# must fit VMEM; 64K keys = 256 KiB. Beyond that, merge passes continue with
+# the HBM-resident strided pass (kernels.merge.kernel.merge_pass_hbm), so
+# the cascade never leaves kernel land. DESIGN.md Section 2.5 has the math.
 DEFAULT_BLOCK = 1024
 MAX_RUN = 65536
-
-
-def _interpret() -> bool:
-    return jax.default_backend() == "cpu"
-
-
-def _pow2_ceil(n: int) -> int:
-    return 1 << max(0, (n - 1).bit_length())
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
@@ -46,19 +41,17 @@ def merge_pass(x, run: int, interpret: bool | None = None):
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def local_sort(x, block: int = DEFAULT_BLOCK, interpret: bool | None = None):
     """Full local sort: kernel block sort + kernel merge cascade."""
+    # deferred: merge.ops imports this module for its ragged-spill fallback
+    from repro.kernels.merge.ops import merge_cascade
+
     interpret = _interpret() if interpret is None else interpret
     n = x.shape[0]
-    np2 = _pow2_ceil(max(n, 2))
+    np2 = pow2_ceil(max(n, 2))
     blk = min(block, np2)
     pad = np2 - n
     xp = jnp.concatenate([x, jnp.full((pad,), hi_sentinel(x.dtype), x.dtype)])
     xp = K.sort_blocks(xp, blk, interpret=interpret)
-    run = blk
-    while run < np2:
-        if 2 * run <= MAX_RUN:
-            xp = K.merge_adjacent(xp, run, interpret=interpret)
-        else:  # VMEM ceiling: finish with one XLA sort of the padded array
-            xp = jnp.sort(xp)
-            break
-        run *= 2
+    # one shared cascade: VMEM pair merges up to the MAX_RUN ceiling, the
+    # HBM-resident strided pass (same comparator network) above it
+    xp = merge_cascade(xp, blk, vmem_block=MAX_RUN, interpret=interpret)
     return xp[:n]

@@ -7,13 +7,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.common import hi_sentinel, round_up
+from repro.kernels import interpret_default as _interpret
 from repro.kernels.histogram.kernel import probe_ranks_pallas
 
 DEFAULT_TILE = 512
-
-
-def _interpret() -> bool:
-    return jax.default_backend() == "cpu"
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))

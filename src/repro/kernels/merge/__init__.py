@@ -1,0 +1,17 @@
+"""k-way merge Pallas kernels (DESIGN.md Section 2.5).
+
+The post-exchange merge is the third single-core hot spot (after local sort
+and histogramming): every exchange strategy hands each shard p *already
+sorted* runs, and re-sorting them from scratch wastes the structure the
+pipeline just paid to create. This package merges them instead:
+
+kernel  the comparator-network primitives — a strided HBM compare-exchange
+        pass, a VMEM block cascade, and the full HBM-resident pair-merge
+        pass built from both.
+ops     jit'd entry points: `merge_sorted_runs` (k equal-capacity runs),
+        `merge_flat_runs` (contiguous equal runs), `merge_ragged_runs`
+        (runs at traced offsets, with an in-kernel full-sort fallback), and
+        the `gather_runs` ragged-to-static extraction helper.
+ref     pure-jnp oracles (the merges are bit-identical to `jnp.sort` over
+        the same entries).
+"""

@@ -1,0 +1,144 @@
+"""jit'd k-way merge entry points (DESIGN.md Section 2.5).
+
+merge_sorted_runs   (k, r) equal-capacity sorted rows -> (k*r,) sorted.
+merge_flat_runs     contiguous equal-length sorted runs in a flat array.
+merge_ragged_runs   runs at *traced* offsets/lengths inside a flat buffer,
+                    with an in-kernel full-sort fallback when a run exceeds
+                    the static slot bound.
+gather_runs         ragged runs -> static sentinel-padded (k, slot) buffer.
+
+All merges are exact: given the documented layout (sorted runs, sentinel
+filled slack) and the core key contract (NaN-free, non-sentinel keys — a
+float NaN propagates through both min/max lanes of a comparator network;
+see repro.kernels.__init__) the output is bit-identical to `jnp.sort` over
+the same entries. k runs merge in log(k) levels of a pairwise bitonic-merge tree;
+each level is one streaming pass (VMEM pair-merge kernel while 2*run fits
+the VMEM budget, the HBM-resident strided pass above it), so the cascade
+never falls back to an XLA sort. The win is kernel residency and
+full-width VPU compare-exchanges per pass — not comparator-count
+asymptotics: a bitonic merge tree is O(n log k log n) compares.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.common import hi_sentinel, pow2_ceil
+from repro.kernels import interpret_default as _interpret
+from repro.kernels.bitonic_sort import kernel as BK
+from repro.kernels.bitonic_sort import ops as bops
+from repro.kernels.merge import kernel as MK
+
+
+def merge_cascade(x, run: int, *, vmem_block: int, interpret: bool):
+    """Pairwise-merge tree: sorted runs of length `run` (pow2) -> one sorted
+    run. Also the tail of `bitonic_sort.ops.local_sort` — one cascade
+    implementation, whatever produced the runs."""
+    n = x.shape[0]
+    while run < n:
+        if 2 * run <= vmem_block:
+            x = BK.merge_adjacent(x, run, interpret=interpret)
+        else:
+            x = MK.merge_pass_hbm(x, run, vmem_block=vmem_block,
+                                  interpret=interpret)
+        run *= 2
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("vmem_block", "interpret"))
+def merge_sorted_runs(runs, vmem_block: int | None = None,
+                      interpret: bool | None = None):
+    """Merge the k sorted rows of a (k, r) array into one sorted (k*r,) run.
+
+    Rows may carry sentinel-padded tails (sentinels are ordinary largest
+    keys). k and r need not be powers of two: rows/columns are sentinel
+    padded up to the next power internally and the pad is sliced back off —
+    sentinels sort to the global tail, so the slice is exact.
+    """
+    interpret = _interpret() if interpret is None else interpret
+    vmem_block = bops.MAX_RUN if vmem_block is None else vmem_block
+    k, r = runs.shape
+    if k * r == 0:
+        return jnp.zeros((k * r,), runs.dtype)
+    sent = hi_sentinel(runs.dtype)
+    k2, r2 = pow2_ceil(k), pow2_ceil(r)
+    if r2 != r:
+        runs = jnp.concatenate(
+            [runs, jnp.full((k, r2 - r), sent, runs.dtype)], axis=1)
+    if k2 != k:
+        runs = jnp.concatenate(
+            [runs, jnp.full((k2 - k, r2), sent, runs.dtype)], axis=0)
+    if k2 == 1:
+        return runs.reshape(-1)[:r]
+    out = merge_cascade(runs.reshape(-1), r2, vmem_block=vmem_block,
+                        interpret=interpret)
+    return out[:k * r]
+
+
+@functools.partial(jax.jit, static_argnames=("run", "vmem_block", "interpret"))
+def merge_flat_runs(x, run: int, vmem_block: int | None = None,
+                    interpret: bool | None = None):
+    """Merge back-to-back sorted runs of equal static length `run`."""
+    n = x.shape[0]
+    assert n % run == 0, (n, run)
+    return merge_sorted_runs(x.reshape(n // run, run), vmem_block=vmem_block,
+                             interpret=interpret)
+
+
+def cap_to(merged, cap: int):
+    """Slice/pad a sorted run to a static capacity (sentinel-filled tail)."""
+    if merged.shape[0] >= cap:
+        return merged[:cap]
+    return jnp.concatenate(
+        [merged, jnp.full((cap - merged.shape[0],),
+                          hi_sentinel(merged.dtype), merged.dtype)])
+
+
+def gather_runs(buf, starts, counts, slot: int):
+    """Extract k runs at traced offsets into a sentinel-padded (k, slot)
+    buffer. Slots past counts[i] hold the sentinel; entries of a run beyond
+    `slot` are NOT represented (callers detect via counts > slot)."""
+    cap = buf.shape[0]
+    pos = jnp.arange(slot, dtype=jnp.int32)[None, :]
+    idx = jnp.asarray(starts, jnp.int32)[:, None] + pos
+    valid = pos < jnp.asarray(counts, jnp.int32)[:, None]
+    vals = buf[jnp.clip(idx, 0, cap - 1)]
+    return jnp.where(valid, vals, hi_sentinel(buf.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("slot", "vmem_block", "interpret"))
+def merge_ragged_runs(buf, starts, counts, slot: int | None = None,
+                      vmem_block: int | None = None,
+                      interpret: bool | None = None):
+    """Sort a flat buffer holding k sorted runs at traced offsets.
+
+    Layout contract: buf[starts[i] : starts[i]+counts[i]] is sorted
+    ascending for each i, runs do not overlap, and every other slot holds
+    the dtype's hi sentinel. The result is then bit-identical to
+    `jnp.sort(buf)`.
+
+    `slot` is the static per-run capacity of the merge tree (memory is
+    k*slot). Runs are bounded by traced counts, so a run *can* exceed a
+    tight slot; that case is detected on device and routed to the bitonic
+    full-sort fallback via lax.cond — still exact, still kernel-resident.
+    slot=None uses the provably sufficient bound (the whole buffer).
+    """
+    interpret = _interpret() if interpret is None else interpret
+    cap = buf.shape[0]
+    slot = pow2_ceil(cap if slot is None else min(slot, cap))
+
+    def merge_path(b):
+        runs = gather_runs(b, starts, counts, slot)
+        merged = merge_sorted_runs(runs, vmem_block=vmem_block,
+                                   interpret=interpret)
+        return cap_to(merged, cap)
+
+    if slot >= cap:          # slot provably fits every run
+        return merge_path(buf)
+    spill = jnp.any(jnp.asarray(counts, jnp.int32) > slot)
+    return jax.lax.cond(
+        spill,
+        lambda b: bops.local_sort(b, interpret=interpret),
+        merge_path, buf)

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import dispatch
 from repro.sort import driver
 from repro.sort.adapters import SortOutput, make_plan
 from repro.sort.partitioners import ShardCtx, get_partitioner
@@ -52,10 +53,11 @@ def _sort_impl(x, spec: SortSpec, want_indices: bool) -> SortOutput:
               if spec.initial_probes is not None else None)
     ctx = ShardCtx(spec=spec, axis_names=names, sizes=sizes, rng=None,
                    initial_probes=probes)
+    p1_sort = spec.local_sort_fn or dispatch.local_sort_fn(spec.kernel_policy)
     raw = driver.run(
         lambda local, rng: part.sharded(local, rng, ctx),
         enc, mesh=spec.mesh, axis_names=names, sizes=sizes, seed=spec.seed,
-        n_real=plan.n)
+        n_real=plan.n, local_sort_fn=p1_sort)
     return plan.decode(raw)
 
 

@@ -84,61 +84,80 @@ def factor_stages(p: int) -> tuple[int, int]:
 def pad_to_shards(x: jax.Array, p: int):
     """Sentinel-pad x up to a multiple of p. Returns (padded, n_pad).
 
-    Refuses sentinel-valued real keys when it has to pad: they would be
-    indistinguishable from the pads and silently stripped with the pads
-    later. The `repro.sort` front-door rebases such keys below the sentinel
-    via tagging before they ever reach here; raw-core callers must keep
-    dtype-max keys out or supply divisible input (the documented contract).
+    Sentinel-valued real keys are permitted: `run` counts them device-side
+    *before* padding and restores them into the post-sort counts
+    (`strip_sentinel_counts(..., n_restore=...)`), so they are served as
+    data while the pads are stripped. The old implementation instead raised
+    here after a `bool(jnp.max(x) == pad_value)` check — a host-blocking
+    device round-trip inside every non-divisible dispatch.
     """
     n = x.shape[0]
     n_pad = (-n) % p
     if n_pad == 0:
         return x, 0
-    pad_value = hi_sentinel(x.dtype)
-    if bool(jnp.max(x) == pad_value):
-        raise ValueError(
-            f"input length {n} needs sentinel padding to fill {p} shards, "
-            f"but the keys contain the sentinel value {pad_value} — use "
-            "repro.sort.sort (which tags such keys) or pad the input "
-            "yourself")
-    pad = jnp.full((n_pad,), pad_value, x.dtype)
+    pad = jnp.full((n_pad,), hi_sentinel(x.dtype), x.dtype)
     return jnp.concatenate([x, pad]), n_pad
 
 
-def strip_sentinel_counts(shards, counts):
+def strip_sentinel_counts(shards, counts, n_pad=0, n_restore=None):
     """Exclude sentinel-valued entries from per-shard valid counts.
 
     Used when the driver sentinel-padded a non-divisible input: pads travel
     through the exchange as ordinary (globally largest) keys and some
     strategies count them as valid. Counting the sentinels actually present
     in each valid prefix — rather than assuming `n_pad` survived — stays
-    exact even when the exchange dropped keys. Strategies that already
-    filter sentinels (allgather) see no change.
+    exact even when the exchange dropped keys.
+
+    When the input also contained genuine sentinel-valued keys (`n_restore`,
+    a traced count the caller took before padding), they are
+    indistinguishable from the pads by value, so the stripped tail is
+    partially restored: only the sentinels present *beyond* `n_pad` are
+    provably data, so exactly that many are kept. If the exchange dropped
+    sentinel entries, the loss is therefore charged against the restored
+    data keys first — conservative by design: a pad can never surface as
+    data, at the price of under-restoring under drops (which the overflow
+    counter already reports). Restored slots go to the earliest shards
+    whose prefixes held sentinels — sentinels only occupy the global tail,
+    so this keeps the gathered output sorted. All device-side; no host
+    sync.
     """
     cap = shards.shape[1]
     counts = jnp.asarray(counts, jnp.int32)
     valid = jnp.arange(cap, dtype=jnp.int32)[None, :] < counts[:, None]
     pads = valid & (shards == hi_sentinel(shards.dtype))
-    return counts - jnp.sum(pads, axis=1).astype(jnp.int32)
+    stripped = jnp.sum(pads, axis=1).astype(jnp.int32)
+    counts = counts - stripped
+    if n_restore is None:
+        return counts
+    keep = jnp.clip(jnp.sum(stripped) - n_pad, 0,
+                    jnp.asarray(n_restore, jnp.int32))
+    before = jnp.cumsum(stripped) - stripped
+    return counts + jnp.clip(keep - before, 0, stripped)
 
 
 def run(sort_fn, x, *, mesh=None, axis_names=("sort",), sizes=None, seed=0,
-        n_real=None):
+        n_real=None, local_sort_fn=None):
     """Run a shard-level sort over a mesh; returns the raw 6-tuple with
     leading (p, ...) shard dims: (shards, counts, keys, ranks, overflow,
     stats). Inputs the driver itself had to sentinel-pad get their counts
     corrected via `strip_sentinel_counts`; callers that pre-padded with
     non-sentinel values (the tagged adapter path) correct counts on decode.
-    `n_real` (default: len(x)) is the non-pad key count for the p==1 path.
+    `n_real` (default: len(x)) is the non-pad key count for the p==1 path,
+    and `local_sort_fn` (default jnp.sort) is what that path runs — callers
+    with a kernel_policy pass a dispatch-routed sort so a single-device
+    mesh still honors the policy.
     """
     plan = resolve_mesh(mesh, axis_names, sizes)
     p = plan.p
     n_real = x.shape[0] if n_real is None else n_real
     if p == 1:
-        out = jnp.sort(x)
+        out = (local_sort_fn or jnp.sort)(x)
         return (out[None], jnp.full((1,), n_real, jnp.int32),
                 jnp.zeros((0,), x.dtype), jnp.zeros((0,), jnp.int32),
                 jnp.zeros((), jnp.int32), None)
+    n_sent_real = None
+    if (-x.shape[0]) % p:   # count sentinel-valued data keys before padding
+        n_sent_real = jnp.sum((x == hi_sentinel(x.dtype)).astype(jnp.int32))
     x, n_pad = pad_to_shards(x, p)
     n_local = x.shape[0] // p
     xs = x.reshape(plan.sizes + (n_local,))
@@ -165,7 +184,8 @@ def run(sort_fn, x, *, mesh=None, axis_names=("sort",), sizes=None, seed=0,
     out = out.reshape((p,) + out.shape[naxes:])
     counts = counts.reshape(p)
     if n_pad:   # our sentinel pads may have been counted as keys
-        counts = strip_sentinel_counts(out, counts)
+        counts = strip_sentinel_counts(out, counts, n_pad=n_pad,
+                                       n_restore=n_sent_real)
     return out, counts, keys, ranks, ovf, stats
 
 

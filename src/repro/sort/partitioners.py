@@ -33,6 +33,7 @@ from repro.core.sample_sort import (
     default_regular_s, default_total_sample, random_sample_splitters,
     regular_sample_splitters)
 from repro.core.splitters import SplitterStats, hss_splitters
+from repro.kernels import dispatch
 from repro.sort.driver import factor_stages
 from repro.sort.spec import SortSpec
 
@@ -88,8 +89,9 @@ class Partitioner:
 
     def sharded(self, local, rng, ctx: ShardCtx):
         """Full shard-level sort: local sort -> splitters -> exchange."""
-        local_sort_fn = ctx.spec.local_sort_fn or jnp.sort
-        local_sorted = local_sort_fn(local)
+        sort_local = (ctx.spec.local_sort_fn
+                      or dispatch.local_sort_fn(ctx.spec.kernel_policy))
+        local_sorted = sort_local(local)
         keys, ranks, s_ovf, stats = self.splitters(
             local_sorted, dataclasses.replace(ctx, rng=rng))
         out, n_valid, e_ovf = exchange(
@@ -142,7 +144,8 @@ class RandomSamplePartitioner(Partitioner):
             ctx.p, local_sorted.shape[0], ctx.spec.eps)
         keys, ovf = random_sample_splitters(
             local_sorted, axis_name=ctx.axis_name, p=ctx.p,
-            total_sample=total, rng=ctx.rng)
+            total_sample=total, rng=ctx.rng,
+            kernel_policy=ctx.spec.kernel_policy)
         return keys, jnp.zeros_like(keys, jnp.int32), ovf, null_stats()
 
 
@@ -153,7 +156,8 @@ class RegularSamplePartitioner(Partitioner):
     def splitters(self, local_sorted, ctx):
         s = ctx.spec.s or default_regular_s(ctx.p, ctx.spec.eps)
         keys = regular_sample_splitters(
-            local_sorted, axis_name=ctx.axis_name, p=ctx.p, s=s)
+            local_sorted, axis_name=ctx.axis_name, p=ctx.p, s=s,
+            kernel_policy=ctx.spec.kernel_policy)
         return (keys, jnp.zeros_like(keys, jnp.int32),
                 jnp.zeros((), jnp.int32), null_stats())
 
@@ -165,7 +169,8 @@ class AMSPartitioner(Partitioner):
     def splitters(self, local_sorted, ctx):
         keys, ranks, ovf, ok = ams_splitters(
             local_sorted, axis_name=ctx.axis_name, p=ctx.p, rng=ctx.rng,
-            eps=ctx.spec.eps, total_sample=ctx.spec.total_sample)
+            eps=ctx.spec.eps, total_sample=ctx.spec.total_sample,
+            kernel_policy=ctx.spec.kernel_policy)
         return keys, ranks, ovf, null_stats(
             jnp.where(ok, ctx.p - 1, 0))
 

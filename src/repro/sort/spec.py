@@ -58,7 +58,17 @@ class SortSpec:
                      pass an explicit True/False instead.
       seed           PRNG seed for the sampling rounds.
       initial_probes warm-start probes (the ChaNGa trick, paper Sec. 7.3).
-      local_sort_fn  local-sort kernel override (e.g. the Pallas bitonic sort).
+      local_sort_fn  local-sort callable override; None routes the local sort
+                     through the kernel dispatch layer under kernel_policy.
+
+    Compute backend:
+      kernel_policy  "auto" | "pallas" | "xla" — which backend runs the
+                     local sort, probe ranking, and post-exchange merges
+                     (repro.kernels.dispatch, DESIGN.md Section 2.5).
+                     "auto" = Pallas kernels on TPU, XLA primitives
+                     elsewhere; "pallas" forces the kernels (interpret mode
+                     off-TPU — the parity/testing path); "xla" forces the
+                     jnp primitives. All choices are bit-identical.
     """
 
     algorithm: str = "hss"
@@ -81,6 +91,7 @@ class SortSpec:
     # semantics
     stable: bool = False
     tag: bool | None = None
+    kernel_policy: str = "auto"
     seed: int = 0
     initial_probes: Any = None
     local_sort_fn: Any = None
@@ -88,9 +99,11 @@ class SortSpec:
     def hss_config(self) -> HSSConfig:
         return HSSConfig(eps=self.eps, rounds=self.rounds,
                          sample_per_shard=self.sample_per_shard,
-                         adaptive=self.adaptive, out_slack=self.out_slack)
+                         adaptive=self.adaptive, out_slack=self.out_slack,
+                         kernel_policy=self.kernel_policy)
 
     def exchange_config(self) -> ExchangeConfig:
         return ExchangeConfig(strategy=self.exchange,
                               pair_factor=self.pair_factor,
-                              out_slack=self.out_slack)
+                              out_slack=self.out_slack,
+                              kernel_policy=self.kernel_policy)

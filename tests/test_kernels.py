@@ -9,6 +9,8 @@ from repro.kernels.bitonic_sort import ref as bref
 from repro.kernels.histogram import ops as hops
 from repro.kernels.histogram import ref as href
 
+pytestmark = pytest.mark.kernels
+
 
 def _keys(rng, n, dtype):
     if np.issubdtype(dtype, np.floating):
@@ -51,8 +53,9 @@ def test_local_sort_with_duplicates(rng):
     np.testing.assert_array_equal(np.asarray(got), np.sort(np.asarray(x)))
 
 
-def test_local_sort_hits_jnp_fallback(rng):
-    """Runs > MAX_RUN finish with the documented XLA fallback path."""
+def test_local_sort_above_vmem_ceiling(rng):
+    """Runs > MAX_RUN continue with the HBM-resident strided merge pass
+    (kernels.merge) — the cascade never falls back to an XLA sort."""
     import repro.kernels.bitonic_sort.ops as mod
     old = mod.MAX_RUN
     try:

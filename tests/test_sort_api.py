@@ -179,14 +179,26 @@ def test_unknown_algorithm_rejected():
         sort(jnp.arange(8), algorithm="quicksort")
 
 
-def test_legacy_pad_refuses_sentinel_keys():
-    # raw-core path, non-divisible input containing the sentinel value:
-    # padding would silently strip the real key, so the driver must refuse
-    from repro.core import hss_sort
-    x = jnp.asarray(np.array([np.iinfo(np.int32).max, 5, 1, 9, 3, 7, 2],
-                             np.int32))
-    with pytest.raises(ValueError, match="sentinel"):
-        hss_sort(x)
+def test_legacy_pad_keeps_sentinel_keys():
+    # raw-core path, non-divisible input containing the sentinel value: the
+    # driver counts sentinel-valued data keys device-side before padding and
+    # restores them into the post-sort counts, so the key is served as data
+    # while the pads are stripped — with no host round-trip (the old
+    # implementation blocked on a device sync and raised here)
+    from repro.core import gather_sorted, hss_sort
+    x = np.array([np.iinfo(np.int32).max, 5, 1, 9, 3, 7, 2], np.int32)
+    res = hss_sort(jnp.asarray(x))
+    np.testing.assert_array_equal(gather_sorted(res), np.sort(x))
+
+
+def test_legacy_pad_keeps_many_sentinel_keys():
+    # sentinel keys spanning multiple tail shards restore in order
+    from repro.core import gather_sorted, hss_sort
+    rng = np.random.default_rng(3)
+    x = rng.integers(0, 1000, size=8 * 64 + 3).astype(np.int32)
+    x[:17] = np.iinfo(np.int32).max
+    res = hss_sort(jnp.asarray(x))
+    np.testing.assert_array_equal(gather_sorted(res), np.sort(x))
 
 
 def test_backcompat_core_shims(rng):
