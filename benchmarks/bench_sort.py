@@ -1,0 +1,78 @@
+"""End-to-end sort-engine bench: the batched single-launch engine vs a
+sequential request loop, plus executable-cache launch latency.
+
+Rows feed `BENCH_sort.json` (written by benchmarks/run.py at the repo
+root, committed as the perf trajectory and uploaded by CI):
+
+  sort/single_warm        one warm `sort()` call (the serving steady state)
+  sort/sequential_b8      8 requests as 8 sequential warm `sort()` calls
+  sort/batched_b8         the same 8 requests as ONE `sort_batched` launch
+                          (derived field carries the speedup — the
+                          acceptance bar is >= 2x over the sequential loop)
+  sort/cache_cold_launch  first call on a fresh shape bucket: trace+compile
+  sort/cache_warm_launch  second call on that bucket: executable-cache hit
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit
+from repro.sort import SortSpec, exec_cache, sort, sort_batched
+
+B = 8
+N = 8 * 2048
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    # distinct keys + explicit tag=False: skips the per-call duplicate
+    # auto-detection so the rows time the engine, not the adapter probe
+    spec = SortSpec(exchange="allgather", tag=False)
+    xs = np.stack([rng.permutation(1 << 20)[:N].astype(np.int32)
+                   for _ in range(B)])
+    xs_dev = jnp.asarray(xs)
+
+    def one(x):
+        return sort(x, spec).shards
+
+    def sequential(xs):
+        return [sort(xs[b], spec).shards for b in range(B)]
+
+    def batched(xs):
+        return sort_batched(xs, spec).shards
+
+    us_one = timeit(one, xs_dev[0])
+    rows.append(("sort/single_warm", round(us_one, 1),
+                 f"n={N} int32 p={jax.device_count()} allgather"))
+
+    us_seq = timeit(sequential, xs_dev)
+    rows.append(("sort/sequential_b8", round(us_seq, 1),
+                 f"B={B} sequential sort() loop"))
+
+    us_bat = timeit(batched, xs_dev)
+    rows.append(("sort/batched_b8", round(us_bat, 1),
+                 f"B={B} single launch; speedup_vs_sequential="
+                 f"{us_seq / max(us_bat, 1e-9):.2f}x"))
+
+    # cache launch latency: a shape bucket nothing else in-process used
+    n_cold = 8 * 1999
+    xs_cold = jnp.asarray(
+        np.stack([rng.permutation(n_cold).astype(np.int32)
+                  for _ in range(B)]))
+    misses0 = exec_cache.misses
+    t0 = time.perf_counter()
+    jax.block_until_ready(sort_batched(xs_cold, spec).shards)
+    cold_us = (time.perf_counter() - t0) * 1e6
+    assert exec_cache.misses == misses0 + 1, "cold bucket was already cached"
+    rows.append(("sort/cache_cold_launch", round(cold_us, 1),
+                 f"first call: trace+compile, B={B} n={n_cold}"))
+    warm_us = timeit(lambda v: sort_batched(v, spec).shards, xs_cold)
+    rows.append(("sort/cache_warm_launch", round(warm_us, 1),
+                 f"executable-cache hit; cold/warm="
+                 f"{cold_us / max(warm_us, 1e-9):.1f}x"))
+    return rows

@@ -1,0 +1,115 @@
+"""CI benchmark regression guard.
+
+Compares freshly regenerated BENCH_*.json snapshots at the repo root
+against the committed baselines (`git show HEAD:<file>`) and fails when
+any kernel row slowed down by more than the threshold (default 25%).
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        [--threshold 1.25] [--files BENCH_kernels.json ...]
+
+Only BENCH_kernels.json rows gate by default — the kernel microbenches are
+compiled single-op timings, stable enough for a hard bar; the end-to-end
+BENCH_sort.json rows (driver + adapter + collectives) are reported for the
+trajectory but do not fail the build. Rows missing from either side (newly
+added or renamed benches) are skipped with a note.
+
+Noise handling: committed baselines and CI runs come from different
+machines, so a first-pass "slowdown" can be scheduler noise rather than a
+regression. When the gated file fails, the guard re-runs that bench once
+(`benchmarks.run --only kernels`) and takes the per-row MINIMUM of the two
+runs before deciding — a genuine regression is slow twice; a noisy
+neighbor usually is not. `--no-retry` disables the re-run (for local use).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def load_baseline(fname: str):
+    try:
+        txt = subprocess.check_output(
+            ["git", "show", f"HEAD:{fname}"], cwd=REPO_ROOT,
+            stderr=subprocess.DEVNULL, text=True)
+    except (subprocess.CalledProcessError, OSError):
+        return None
+    return json.loads(txt)
+
+
+def rows_by_name(payload):
+    return {r["name"]: r["us_per_call"] for r in payload.get("rows", [])
+            if r.get("us_per_call") is not None}
+
+
+def compare(fname: str, threshold: float, gate: bool,
+            retry: bool = True) -> list[str]:
+    """Returns failure messages (empty = pass / skipped)."""
+    path = REPO_ROOT / fname
+    if not path.exists():
+        print(f"# {fname}: not regenerated, skipping")
+        return []
+    baseline = load_baseline(fname)
+    if baseline is None:
+        print(f"# {fname}: no committed baseline at HEAD, skipping")
+        return []
+    base = rows_by_name(baseline)
+    cur = rows_by_name(json.loads(path.read_text()))
+    slow = [name for name, base_us in base.items()
+            if name in cur and cur[name] / max(base_us, 1e-9) > threshold]
+    if slow and gate and retry:
+        print(f"# {fname}: {len(slow)} slow row(s) on first pass — "
+              "re-running the bench once to rule out machine noise")
+        bench_key = fname[len("BENCH_"):-len(".json")]
+        rerun = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", "--only", bench_key],
+            cwd=REPO_ROOT, capture_output=True, text=True)
+        if rerun.returncode == 0:
+            cur2 = rows_by_name(json.loads(path.read_text()))
+            cur = {k: min(v, cur2.get(k, v)) for k, v in cur.items()}
+        else:
+            print(f"# {fname}: re-run failed, keeping first-pass timings")
+    failures = []
+    for name, base_us in sorted(base.items()):
+        if name not in cur:
+            print(f"# {fname}: row {name} gone from regenerated snapshot")
+            continue
+        ratio = cur[name] / max(base_us, 1e-9)
+        status = "OK" if ratio <= threshold else "SLOW"
+        print(f"{name},{base_us},{cur[name]},{ratio:.2f}x,{status}")
+        if ratio > threshold and gate:
+            failures.append(
+                f"{name}: {base_us} -> {cur[name]} us ({ratio:.2f}x > "
+                f"{threshold:.2f}x threshold)")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--threshold", type=float, default=1.25)
+    ap.add_argument("--no-retry", action="store_true",
+                    help="fail on first-pass timings without a re-run")
+    ap.add_argument("--files", nargs="*",
+                    default=["BENCH_kernels.json", "BENCH_sort.json"])
+    args = ap.parse_args()
+
+    print("name,baseline_us,current_us,ratio,status")
+    failures: list[str] = []
+    for fname in args.files:
+        gate = fname == "BENCH_kernels.json"
+        failures += compare(fname, args.threshold, gate,
+                            retry=not args.no_retry)
+    if failures:
+        print("\nbenchmark regression guard FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        sys.exit(1)
+    print("# regression guard passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -35,6 +35,7 @@ BENCHES = [
     ("fig3", "benchmarks.bench_fig3_duplicates"),
     ("fig7", "benchmarks.bench_fig7_application"),
     ("kernels", "benchmarks.bench_kernels"),
+    ("sort", "benchmarks.bench_sort"),
     ("moe", "benchmarks.bench_moe_dispatch"),
     ("sortcoll", "benchmarks.bench_sort_collectives"),
     ("roofline", "benchmarks.roofline"),
@@ -74,6 +75,8 @@ def main() -> None:
             emit(rows)
             if key == "kernels":
                 _write_json("BENCH_kernels.json", key, rows)
+            if key == "sort":
+                _write_json("BENCH_sort.json", key, rows)
             print(f"# {key}: {time.time()-t0:.1f}s", flush=True)
         except Exception:
             failures += 1

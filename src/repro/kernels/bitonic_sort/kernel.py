@@ -70,6 +70,17 @@ def _merge_pair_kernel(x_ref, o_ref):
     o_ref[...] = bitonic_merge_network(bitonic)
 
 
+def _sort_block_row_kernel(x_ref, o_ref):
+    o_ref[...] = bitonic_sort_network(x_ref[0])[None]
+
+
+def _merge_pair_row_kernel(x_ref, o_ref):
+    x = x_ref[0]
+    half = x.shape[0] // 2
+    bitonic = jnp.concatenate([x[:half], x[half:][::-1]])
+    o_ref[...] = bitonic_merge_network(bitonic)[None]
+
+
 def sort_blocks(x: jax.Array, block: int, *, interpret: bool) -> jax.Array:
     """Sort each contiguous `block`-sized run of x independently."""
     n = x.shape[0]
@@ -85,6 +96,25 @@ def sort_blocks(x: jax.Array, block: int, *, interpret: bool) -> jax.Array:
     )(x)
 
 
+def sort_blocks_batched(x: jax.Array, block: int, *,
+                        interpret: bool) -> jax.Array:
+    """Sort each `block`-sized run of each row of a (B, n) array.
+
+    One launch for the whole batch: the grid grows a leading batch
+    dimension (B, n // block) instead of issuing B kernel calls.
+    """
+    b, n = x.shape
+    assert n % block == 0, (n, block)
+    return pl.pallas_call(
+        _sort_block_row_kernel,
+        grid=(b, n // block),
+        in_specs=[pl.BlockSpec((1, block), lambda r, i: (r, i))],
+        out_specs=pl.BlockSpec((1, block), lambda r, i: (r, i)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)
+
+
 def merge_adjacent(x: jax.Array, run: int, *, interpret: bool) -> jax.Array:
     """Merge adjacent sorted runs of length `run` into runs of 2*run."""
     n = x.shape[0]
@@ -95,6 +125,22 @@ def merge_adjacent(x: jax.Array, run: int, *, interpret: bool) -> jax.Array:
         grid=grid,
         in_specs=[pl.BlockSpec((2 * run,), lambda i: (i,))],
         out_specs=pl.BlockSpec((2 * run,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def merge_adjacent_batched(x: jax.Array, run: int, *,
+                           interpret: bool) -> jax.Array:
+    """Per-row `merge_adjacent` of a (B, n) array in one launch (batch grid
+    dimension; runs never span rows because n % (2*run) == 0)."""
+    b, n = x.shape
+    assert n % (2 * run) == 0, (n, run)
+    return pl.pallas_call(
+        _merge_pair_row_kernel,
+        grid=(b, n // (2 * run)),
+        in_specs=[pl.BlockSpec((1, 2 * run), lambda r, i: (r, i))],
+        out_specs=pl.BlockSpec((1, 2 * run), lambda r, i: (r, i)),
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         interpret=interpret,
     )(x)

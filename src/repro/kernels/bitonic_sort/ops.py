@@ -55,3 +55,28 @@ def local_sort(x, block: int = DEFAULT_BLOCK, interpret: bool | None = None):
     # HBM-resident strided pass (same comparator network) above it
     xp = merge_cascade(xp, blk, vmem_block=MAX_RUN, interpret=interpret)
     return xp[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def local_sort_batched(x, block: int = DEFAULT_BLOCK,
+                       interpret: bool | None = None):
+    """Sort each row of a (B, n) array in one kernel launch per pass.
+
+    Rows are sentinel-padded to a shared power-of-two length, the block sort
+    runs over a (B, blocks) grid, and the merge cascade stops at the row
+    length — the row boundary is a run boundary, so every pass (VMEM pair
+    merge or HBM strided pass) stays within its row by construction. B rows
+    therefore cost the *same number of kernel launches* as one row.
+    """
+    from repro.kernels.merge.ops import merge_cascade_rows
+
+    interpret = _interpret() if interpret is None else interpret
+    b, n = x.shape
+    np2 = pow2_ceil(max(n, 2))
+    blk = min(block, np2)
+    pad = np2 - n
+    xp = jnp.concatenate(
+        [x, jnp.full((b, pad), hi_sentinel(x.dtype), x.dtype)], axis=1)
+    xp = K.sort_blocks_batched(xp, blk, interpret=interpret)
+    xp = merge_cascade_rows(xp, blk, vmem_block=MAX_RUN, interpret=interpret)
+    return xp[:, :n]

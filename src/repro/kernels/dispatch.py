@@ -64,6 +64,11 @@ def local_sort_fn(policy: str = "auto"):
     return lambda x: local_sort(x, policy=policy)
 
 
+def local_sort_batched_fn(policy: str = "auto"):
+    """`local_sort_fn`, row-batched: callable over (B, n) key batches."""
+    return lambda x: local_sort_batched(x, policy=policy)
+
+
 # "auto" size ceiling for a full bitonic sort: the network is
 # O(n log^2 n) compares and pads to the next power of two, which is the
 # right trade at shard scale but not for whole-array sorts (the p==1
@@ -79,6 +84,18 @@ def local_sort(x, *, policy: str = "auto", block: int | None = None):
     if resolve_policy(policy, x.dtype) == "xla":
         return jnp.sort(x)
     return bops.local_sort(x, block=block or bops.DEFAULT_BLOCK)
+
+
+def local_sort_batched(x, *, policy: str = "auto", block: int | None = None):
+    """Sort each row of a (B, n) batch; one kernel launch per network pass
+    for the whole batch (batch grid dimension) on the Pallas path, a single
+    axis=-1 `jnp.sort` on the XLA path. Bit-identical per row to
+    `local_sort` on that row."""
+    if policy == "auto" and x.shape[1] > AUTO_SORT_MAX_N:
+        policy = "xla"
+    if resolve_policy(policy, x.dtype) == "xla":
+        return jnp.sort(x, axis=-1)
+    return bops.local_sort_batched(x, block=block or bops.DEFAULT_BLOCK)
 
 
 def probe_ranks(keys, probes, *, policy: str = "auto",
@@ -100,6 +117,24 @@ def probe_ranks(keys, probes, *, policy: str = "auto",
     return hops.probe_ranks(keys, probes)
 
 
+def probe_ranks_batched(keys, probes, *, policy: str = "auto",
+                        assume_sorted: bool = False):
+    """Per-request ranks: rank[b, m] = #{keys[b] < probes[b, m]} as int32.
+
+    keys (B, n), probes (B, M) -> (B, M). The Pallas histogram kernel runs
+    the whole batch on one (B, tiles) grid; the XLA path vmaps the same
+    primitives the unbatched dispatch uses (bit-identical)."""
+    if probes.shape[1] == 0:
+        return jnp.zeros(probes.shape, jnp.int32)
+    if resolve_policy(policy, keys.dtype) == "xla":
+        if assume_sorted:
+            return jax.vmap(
+                lambda k, q: jnp.searchsorted(k, q, side="left")
+            )(keys, probes).astype(jnp.int32)
+        return jax.vmap(href.probe_ranks_ref)(keys, probes)
+    return hops.probe_ranks_batched(keys, probes)
+
+
 def merge_runs(runs, *, policy: str = "auto", vmem_block: int | None = None):
     """Merge the k sorted rows of a (k, r) array -> (k*r,) sorted.
 
@@ -112,6 +147,16 @@ def merge_runs(runs, *, policy: str = "auto", vmem_block: int | None = None):
     return mops.merge_sorted_runs(runs, vmem_block=vmem_block)
 
 
+def merge_runs_batched(runs, *, policy: str = "auto",
+                       vmem_block: int | None = None):
+    """Per-request k-way merge: (B, k, r) sorted rows -> (B, k*r) sorted
+    rows, bit-identical per row to `merge_runs` on that row. One cascade
+    pass per level covers the whole batch (batch grid dimension)."""
+    if resolve_policy(policy, runs.dtype) == "xla":
+        return jnp.sort(runs.reshape(runs.shape[0], -1), axis=-1)
+    return mops.merge_sorted_runs_batched(runs, vmem_block=vmem_block)
+
+
 def merge_ragged(buf, starts, counts, *, policy: str = "auto",
                  slot: int | None = None, vmem_block: int | None = None):
     """Sort a flat buffer holding sorted runs at traced offsets (sentinel
@@ -121,3 +166,14 @@ def merge_ragged(buf, starts, counts, *, policy: str = "auto",
         return jnp.sort(buf)
     return mops.merge_ragged_runs(buf, starts, counts, slot=slot,
                                   vmem_block=vmem_block)
+
+
+def merge_ragged_batched(buf, starts, counts, *, policy: str = "auto",
+                         slot: int | None = None,
+                         vmem_block: int | None = None):
+    """Batched `merge_ragged`: (B, cap) buffers, (B, k) traced offsets and
+    counts. Bit-identical to `jnp.sort(buf, axis=-1)`."""
+    if resolve_policy(policy, buf.dtype) == "xla":
+        return jnp.sort(buf, axis=-1)
+    return mops.merge_ragged_runs_batched(buf, starts, counts, slot=slot,
+                                          vmem_block=vmem_block)

@@ -48,3 +48,40 @@ def probe_ranks_pallas(keys: jax.Array, probes: jax.Array, *, tile: int,
         out_shape=jax.ShapeDtypeStruct((m,), jnp.int32),
         interpret=interpret,
     )(keys, probes)
+
+
+def _probe_rank_row_kernel(keys_ref, probes_ref, out_ref):
+    step = pl.program_id(1)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    cmp = (keys_ref[0][:, None] < probes_ref[0][None, :])
+    out_ref[...] += jnp.sum(cmp.astype(jnp.int32), axis=0)[None]
+
+
+def probe_ranks_batched_pallas(keys: jax.Array, probes: jax.Array, *,
+                               tile: int, interpret: bool) -> jax.Array:
+    """Per-row probe ranks of a (B, n) key batch against (B, M) probes.
+
+    One launch over a (B, n // tile) grid: the key-tile dimension iterates
+    fastest, so each row's (1, M) output block is revisited and accumulated
+    exactly as in the unbatched kernel, re-initialized when the tile index
+    wraps to 0 for the next row.
+    """
+    b, n = keys.shape
+    m = probes.shape[1]
+    assert probes.shape[0] == b, (keys.shape, probes.shape)
+    assert n % tile == 0, (n, tile)
+    return pl.pallas_call(
+        _probe_rank_row_kernel,
+        grid=(b, n // tile),
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda r, i: (r, i)),
+            pl.BlockSpec((1, m), lambda r, i: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m), lambda r, i: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.int32),
+        interpret=interpret,
+    )(keys, probes)

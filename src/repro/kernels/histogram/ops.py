@@ -8,7 +8,8 @@ import jax.numpy as jnp
 
 from repro.core.common import hi_sentinel, round_up
 from repro.kernels import interpret_default as _interpret
-from repro.kernels.histogram.kernel import probe_ranks_pallas
+from repro.kernels.histogram.kernel import (
+    probe_ranks_batched_pallas, probe_ranks_pallas)
 
 DEFAULT_TILE = 512
 
@@ -25,6 +26,22 @@ def probe_ranks(keys, probes, tile: int = DEFAULT_TILE,
         keys = jnp.concatenate(
             [keys, jnp.full((npad - n,), hi_sentinel(keys.dtype), keys.dtype)])
     return probe_ranks_pallas(keys, probes, tile=t, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def probe_ranks_batched(keys, probes, tile: int = DEFAULT_TILE,
+                        interpret: bool | None = None):
+    """Per-row ranks: rank[b, m] = #{keys[b] < probes[b, m]}. One launch."""
+    interpret = _interpret() if interpret is None else interpret
+    b, n = keys.shape
+    t = min(tile, n)
+    npad = round_up(n, t)
+    if npad != n:
+        keys = jnp.concatenate(
+            [keys, jnp.full((b, npad - n), hi_sentinel(keys.dtype),
+                            keys.dtype)], axis=1)
+    return probe_ranks_batched_pallas(keys, probes, tile=t,
+                                      interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))

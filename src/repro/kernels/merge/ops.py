@@ -6,6 +6,9 @@ merge_ragged_runs   runs at *traced* offsets/lengths inside a flat buffer,
                     with an in-kernel full-sort fallback when a run exceeds
                     the static slot bound.
 gather_runs         ragged runs -> static sentinel-padded (k, slot) buffer.
+*_batched           the same contracts with a leading request-batch axis,
+                    one kernel launch per cascade pass for the whole batch
+                    (merge_cascade_rows; DESIGN.md Section 6.2).
 
 All merges are exact: given the documented layout (sorted runs, sentinel
 filled slack) and the core key contract (NaN-free, non-sentinel keys — a
@@ -47,6 +50,27 @@ def merge_cascade(x, run: int, *, vmem_block: int, interpret: bool):
     return x
 
 
+def merge_cascade_rows(x, run: int, *, vmem_block: int, interpret: bool):
+    """Per-row merge cascade of a (B, n) array, n a power of two: sorted
+    runs of length `run` in each row -> each row one sorted run.
+
+    The VMEM passes use the batched pair-merge kernel (batch grid
+    dimension); the HBM strided passes run on the flattened array — rows
+    are power-of-two length and the pass distance stays below the row
+    length, so no comparator ever crosses a row boundary. Either way every
+    pass covers all B rows in a single kernel launch.
+    """
+    b, n = x.shape
+    while run < n:
+        if 2 * run <= vmem_block:
+            x = BK.merge_adjacent_batched(x, run, interpret=interpret)
+        else:
+            x = MK.merge_pass_hbm(x.reshape(-1), run, vmem_block=vmem_block,
+                                  interpret=interpret).reshape(b, n)
+        run *= 2
+    return x
+
+
 @functools.partial(jax.jit, static_argnames=("vmem_block", "interpret"))
 def merge_sorted_runs(runs, vmem_block: int | None = None,
                       interpret: bool | None = None):
@@ -75,6 +99,35 @@ def merge_sorted_runs(runs, vmem_block: int | None = None,
     out = merge_cascade(runs.reshape(-1), r2, vmem_block=vmem_block,
                         interpret=interpret)
     return out[:k * r]
+
+
+@functools.partial(jax.jit, static_argnames=("vmem_block", "interpret"))
+def merge_sorted_runs_batched(runs, vmem_block: int | None = None,
+                              interpret: bool | None = None):
+    """Per-request k-way merge: (B, k, r) sorted rows -> (B, k*r) sorted.
+
+    The batched counterpart of `merge_sorted_runs` — one cascade over all B
+    requests per pass instead of B separate cascades. Rows/columns are
+    sentinel-padded to powers of two exactly as in the unbatched path.
+    """
+    interpret = _interpret() if interpret is None else interpret
+    vmem_block = bops.MAX_RUN if vmem_block is None else vmem_block
+    b, k, r = runs.shape
+    if k * r == 0:
+        return jnp.zeros((b, k * r), runs.dtype)
+    sent = hi_sentinel(runs.dtype)
+    k2, r2 = pow2_ceil(k), pow2_ceil(r)
+    if r2 != r:
+        runs = jnp.concatenate(
+            [runs, jnp.full((b, k, r2 - r), sent, runs.dtype)], axis=2)
+    if k2 != k:
+        runs = jnp.concatenate(
+            [runs, jnp.full((b, k2 - k, r2), sent, runs.dtype)], axis=1)
+    if k2 == 1:
+        return runs.reshape(b, -1)[:, :r]
+    out = merge_cascade_rows(runs.reshape(b, k2 * r2), r2,
+                             vmem_block=vmem_block, interpret=interpret)
+    return out[:, :k * r]
 
 
 @functools.partial(jax.jit, static_argnames=("run", "vmem_block", "interpret"))
@@ -141,4 +194,43 @@ def merge_ragged_runs(buf, starts, counts, slot: int | None = None,
     return jax.lax.cond(
         spill,
         lambda b: bops.local_sort(b, interpret=interpret),
+        merge_path, buf)
+
+
+def _cap_rows_to(merged, cap: int):
+    """Per-row `cap_to`: slice/pad the trailing axis to a static capacity."""
+    b, n = merged.shape
+    if n >= cap:
+        return merged[:, :cap]
+    return jnp.concatenate(
+        [merged, jnp.full((b, cap - n), hi_sentinel(merged.dtype),
+                          merged.dtype)], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("slot", "vmem_block", "interpret"))
+def merge_ragged_runs_batched(buf, starts, counts, slot: int | None = None,
+                              vmem_block: int | None = None,
+                              interpret: bool | None = None):
+    """Batched `merge_ragged_runs`: buf (B, cap) flat buffers each holding k
+    sorted runs at traced offsets starts/counts (B, k). The spill fallback
+    is batch-wide (lax.cond over any row spilling -> one batched full sort),
+    keeping the whole batch on a single code path per launch.
+    """
+    interpret = _interpret() if interpret is None else interpret
+    b, cap = buf.shape
+    slot = pow2_ceil(cap if slot is None else min(slot, cap))
+
+    def merge_path(bufs):
+        runs = jax.vmap(gather_runs, in_axes=(0, 0, 0, None))(
+            bufs, starts, counts, slot)
+        merged = merge_sorted_runs_batched(runs, vmem_block=vmem_block,
+                                           interpret=interpret)
+        return _cap_rows_to(merged, cap)
+
+    if slot >= cap:
+        return merge_path(buf)
+    spill = jnp.any(jnp.asarray(counts, jnp.int32) > slot)
+    return jax.lax.cond(
+        spill,
+        lambda bu: bops.local_sort_batched(bu, interpret=interpret),
         merge_path, buf)

@@ -60,7 +60,8 @@ def serve_batch(cfg, *, batch: int, prompt_len: int, gen: int, ctx=None,
 
 
 def serve_bucketed(cfg, *, prompt_lens, gen: int, n_buckets: int = 0,
-                   ctx=None, seed: int = 0, len_multiple: int = 8):
+                   ctx=None, seed: int = 0, len_multiple: int = 8,
+                   sort_spec=None):
     """Serve a variable-length request queue in length-homogeneous buckets.
 
     prompt_lens: (n_requests,) prompt lengths. The queue is partitioned into
@@ -69,13 +70,21 @@ def serve_bucketed(cfg, *, prompt_lens, gen: int, n_buckets: int = 0,
     batch padded to the bucket's max length (rounded up to `len_multiple`,
     the SSM chunk size), which is what bounds the padding waste. Returns
     per-bucket (request_ids, stats) plus totals.
+
+    The bucketing sort runs through the compiled-executable cache
+    (DESIGN.md Section 6.3): steady-state request waves of the same queue
+    size re-trace nothing. `sort_spec` overrides the bucketing SortSpec.
+    These buckets are also exactly the shape buckets `repro.sort
+    .sort_batched` wants — equal padded lengths — so sort-heavy request
+    payloads can ride the batched single-launch engine downstream.
     """
     from repro.core.common import round_up
     from repro.data.partition import bucket_lengths
     prompt_lens = np.asarray(prompt_lens).astype(np.int32)
     n_buckets = n_buckets or min(len(jax.devices()),
                                  max(1, prompt_lens.size // 8))
-    buckets, _ = bucket_lengths(prompt_lens, n_shards=n_buckets, seed=seed)
+    buckets, _ = bucket_lengths(prompt_lens, n_shards=n_buckets, seed=seed,
+                                spec=sort_spec)
     ctx = ctx or host_mesh_ctx(cfg)
     params = init_params(cfg, jax.random.key(seed))   # shared by all buckets
     results, tok_total, t_total = [], 0, 0.0

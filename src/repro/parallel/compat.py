@@ -5,10 +5,32 @@ jax releases (and renamed `check_rep` to `check_vma` on the way). The repo
 supports both: every call site routes through `shard_map` below instead of
 touching `jax.shard_map` directly, so the same code runs on the pinned CI
 jax and on current TPU toolchains.
+
+The `jax.tree` aliases grew over several releases too: 0.4.37 has
+`jax.tree.flatten`/`map` but not `flatten_with_path`/`map_with_path`, which
+only exist under `jax.tree_util` there. The checkpoint code
+(repro.ckpt.checkpoint) routes its path-aware traversals through the
+`tree_*` shims below so one code path serves both toolchains.
 """
 from __future__ import annotations
 
 import jax
+
+
+def tree_flatten_with_path(tree):
+    """`jax.tree.flatten_with_path` where available, tree_util elsewhere."""
+    if hasattr(jax.tree, "flatten_with_path"):
+        return jax.tree.flatten_with_path(tree)
+    from jax.tree_util import tree_flatten_with_path as _fwp
+    return _fwp(tree)
+
+
+def tree_map_with_path(f, tree, *rest):
+    """`jax.tree.map_with_path` where available, tree_util elsewhere."""
+    if hasattr(jax.tree, "map_with_path"):
+        return jax.tree.map_with_path(f, tree, *rest)
+    from jax.tree_util import tree_map_with_path as _mwp
+    return _mwp(f, tree, *rest)
 
 
 def shard_map(f, *, mesh, in_specs, out_specs):

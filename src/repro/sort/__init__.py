@@ -14,18 +14,27 @@ Algorithms (see repro.sort.partitioners): "hss" (the paper), the
 dtype/duplicate adapters in repro.sort.adapters; device-level dispatch
 helpers (MoE) in repro.sort.grouping.
 
+Batched serving: `sort_batched(xs)` sorts B independent requests in ONE
+shard_map launch with batch-fused collectives and a compiled-executable
+cache (`exec_cache`) keyed by shape bucket — see DESIGN.md Section 6:
+
+    outs = sort_batched(xs_2d)       # (B, n) -> BatchedSortOutput
+    outs = sort_batched([a, b, c])   # length-bucketed list -> per-request
+
 The legacy per-algorithm entry points (`repro.core.hss_sort` et al.) remain
 as thin shims over the same driver.
 """
-from repro.sort.adapters import SortOutput
-from repro.sort.api import argsort, gather, sort, sort_kv
+from repro.sort.adapters import BatchedSortOutput, SortOutput
+from repro.sort.api import argsort, gather, sort, sort_batched, sort_kv
+from repro.sort.driver import exec_cache
 from repro.sort.partitioners import (
     Partitioner, ShardCtx, available_algorithms, get_partitioner,
     register_partitioner)
 from repro.sort.spec import ALGORITHMS, SortSpec
 
 __all__ = [
-    "ALGORITHMS", "Partitioner", "ShardCtx", "SortOutput", "SortSpec",
-    "argsort", "available_algorithms", "gather", "get_partitioner",
-    "register_partitioner", "sort", "sort_kv",
+    "ALGORITHMS", "BatchedSortOutput", "Partitioner", "ShardCtx",
+    "SortOutput", "SortSpec", "argsort", "available_algorithms",
+    "exec_cache", "gather", "get_partitioner", "register_partitioner",
+    "sort", "sort_batched", "sort_kv",
 ]

@@ -78,11 +78,58 @@ class SortOutput:
         return masked_concat(self.indices, self.counts)
 
 
+class BatchedSortOutput:
+    """Decoded result of `repro.sort.sort_batched`: B equal-length requests
+    sorted independently through one launch.
+
+    Every per-request array of SortOutput gains a leading batch axis:
+    shards (B, p, cap), counts (B, p), indices (B, p, cap) | None,
+    overflow (B,), splitter_keys/splitter_ranks (B, p-1), stats batched
+    per-request (SplitterStats rows of shape (k, B)), n = per-request real
+    key count. `request(b)` views one request as a regular SortOutput.
+    """
+
+    def __init__(self, shards, counts, indices, overflow, splitter_keys,
+                 splitter_ranks, stats, n):
+        self.shards = shards
+        self.counts = counts
+        self.indices = indices
+        self.overflow = overflow
+        self.splitter_keys = splitter_keys
+        self.splitter_ranks = splitter_ranks
+        self.stats = stats
+        self.n = n
+
+    @property
+    def batch(self) -> int:
+        return self.shards.shape[0]
+
+    def request(self, b: int) -> SortOutput:
+        """Request b's result as a SortOutput view (stats stay batched)."""
+        return SortOutput(
+            self.shards[b], self.counts[b],
+            None if self.indices is None else self.indices[b],
+            self.overflow[b], self.splitter_keys[b], self.splitter_ranks[b],
+            self.stats, self.n)
+
+    def gather(self, b: int) -> np.ndarray:
+        """Request b's keys, globally sorted, as one (n,) NumPy array."""
+        return self.request(b).gather()
+
+    def gather_indices(self, b: int) -> np.ndarray:
+        """Request b's argsort permutation as one (n,) NumPy array."""
+        return self.request(b).gather_indices()
+
+    def gather_all(self) -> list:
+        """Every request gathered, in batch order."""
+        return [self.gather(b) for b in range(self.batch)]
+
+
 @dataclasses.dataclass
 class AdapterPlan:
     spec: SortSpec
     p: int
-    n: int                 # real keys
+    n: int                 # real keys (per request on the batched path)
     n_pad: int
     out_dtype: Any         # user-facing key dtype
     float_bits: int        # 0 | 32 | 64
@@ -91,9 +138,14 @@ class AdapterPlan:
     key_min: int = 0       # rebase offset in the (encoded-)integer domain
     key_max: int = 0
     pack_dtype: Any = None
+    batched: bool = False  # plan built over a (B, n) request batch
     _enc: Any = None       # bijection result cached by make_plan (tagged)
 
     def encode(self, x: jax.Array) -> jax.Array:
+        """Keys -> the distinct-integer core domain. x is (n,) — or (B, n)
+        for a batched plan, where every row is encoded identically (shared
+        rebase offset; per-row index tags, so each row's tags decode to
+        that request's own argsort permutation)."""
         if self._enc is not None:
             enc = self._enc
         elif self.float_bits == 32:
@@ -112,11 +164,12 @@ class AdapterPlan:
         # pack dtype otherwise (avoids overflow of signed-min + range).
         dt = jnp.dtype(self.pack_dtype)
         if self.n_pad:   # pads = max real key; sort to the global tail
-            pad = jnp.full((self.n_pad,), jnp.asarray(self.key_max, enc.dtype))
-            enc = jnp.concatenate([enc, pad])
+            pad_shape = enc.shape[:-1] + (self.n_pad,)
+            pad = jnp.full(pad_shape, jnp.asarray(self.key_max, enc.dtype))
+            enc = jnp.concatenate([enc, pad], axis=-1)
         wide = enc.astype(dt) if dt.itemsize > enc.dtype.itemsize else enc
         e = (wide - jnp.asarray(self.key_min, wide.dtype)).astype(dt)
-        return (e << self.tag_b) | jnp.arange(e.shape[0], dtype=dt)
+        return (e << self.tag_b) | jnp.arange(e.shape[-1], dtype=dt)
 
     def encode_probes(self, probes) -> jax.Array:
         """Warm-start probes (original key domain) -> encoded domain."""
@@ -158,6 +211,34 @@ class AdapterPlan:
         return SortOutput(shards, counts, indices, overflow, skeys, sranks,
                           stats, self.n)
 
+    def decode_batched(self, raw) -> "BatchedSortOutput":
+        """Decode the raw batched driver tuple (leading (B,) on every
+        per-request array) into a BatchedSortOutput. Same steps as `decode`
+        with the batch axis carried through."""
+        shards, counts, skeys, sranks, overflow, stats = raw
+        cap = shards.shape[-1]
+        counts = jnp.asarray(counts, jnp.int32)
+        valid = jnp.arange(cap, dtype=jnp.int32)[None, None, :] \
+            < counts[:, :, None]
+        indices = None
+        if self.tagged:
+            mask = (1 << self.tag_b) - 1
+            raw_idx = shards & mask
+            if self.n_pad:
+                pads = valid & (raw_idx >= self.n)
+                counts = counts - jnp.sum(pads, axis=2).astype(jnp.int32)
+                valid = jnp.arange(cap, dtype=jnp.int32)[None, None, :] \
+                    < counts[:, :, None]
+            indices = jnp.where(valid, raw_idx, -1)
+            shards = self._unrebase(shards >> self.tag_b)
+            if skeys.size:
+                skeys = self._unrebase(skeys >> self.tag_b)
+        shards = self._decode_keys(shards)
+        skeys = self._decode_keys(skeys) if skeys.size else skeys
+        shards = jnp.where(valid, shards, hi_sentinel(self.out_dtype))
+        return BatchedSortOutput(shards, counts, indices, overflow, skeys,
+                                 sranks, stats, self.n)
+
     def _unrebase(self, rebased):
         """rebased (pack dtype, in [0, key_range]) -> original key domain.
 
@@ -190,16 +271,24 @@ def _needs_tags(x: jax.Array, spec: SortSpec, want_indices: bool):
         return True, True
     # auto duplicate detection: a device-side sort + adjacent-equal check
     # (only a scalar crosses to host); override with tag=False when keys
-    # are known-distinct and the check matters.
-    s = jnp.sort(x)
-    return bool(jnp.any(s[1:] == s[:-1])), False
+    # are known-distinct and the check matters. On a (B, n) batch, rows
+    # sort independently — duplicates only matter within a request, but
+    # any duplicated row tags the whole batch (one shared plan).
+    s = jnp.sort(x, axis=-1)
+    return bool(jnp.any(s[..., 1:] == s[..., :-1])), False
 
 
 def make_plan(x: jax.Array, spec: SortSpec, p: int,
               want_indices: bool = False) -> AdapterPlan:
-    """Inspect the input and decide bijection/tagging/padding. Host-side."""
-    n = x.shape[0]
-    if n == 0:
+    """Inspect the input and decide bijection/tagging/padding. Host-side.
+
+    x may be (n,) or, for the batched engine, (B, n): one plan serves the
+    whole batch — the key range (and so the rebase offset and packing
+    budget) is taken over all B requests jointly, while tag indices stay
+    per-request (`encode` broadcasts one arange over rows).
+    """
+    n = x.shape[-1]
+    if n == 0 or x.size == 0:
         raise ValueError("cannot sort an empty array")
     n_pad = (-n) % p
     dtype = jnp.dtype(x.dtype)
@@ -219,7 +308,8 @@ def make_plan(x: jax.Array, spec: SortSpec, p: int,
     else:
         raise ValueError(f"unsupported key dtype {dtype}")
     plan = AdapterPlan(spec=spec, p=p, n=n, n_pad=n_pad, out_dtype=dtype,
-                       float_bits=float_bits, tagged=False)
+                       float_bits=float_bits, tagged=False,
+                       batched=x.ndim == 2)
 
     if float_bits == 32:
         enc = float32_to_sortable_int32(x)

@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.kernels import dispatch
 from repro.sort import driver
-from repro.sort.adapters import SortOutput, make_plan
+from repro.sort.adapters import BatchedSortOutput, SortOutput, make_plan
 from repro.sort.partitioners import ShardCtx, get_partitioner
 from repro.sort.spec import SortSpec
 
@@ -37,15 +37,37 @@ def _as_spec(spec, overrides) -> SortSpec:
     return dataclasses.replace(spec, **overrides) if overrides else spec
 
 
+def _mesh_axes(spec: SortSpec, part):
+    p = spec.mesh.devices.size if spec.mesh is not None else len(jax.devices())
+    axes = part.mesh_axes(spec, p)
+    return p, tuple(a for a, _ in axes), tuple(s for _, s in axes)
+
+
+def _cache_key(spec: SortSpec, names, sizes, enc, *, batched: bool):
+    """Compiled-executable cache key: (shape bucket, dtype, SortSpec
+    fingerprint, mesh fingerprint). None (uncached) when the spec carries
+    state the key cannot capture — a caller-supplied local_sort_fn or
+    warm-start probes would be baked into a reused trace."""
+    if spec.local_sort_fn is not None or spec.initial_probes is not None:
+        return None
+    if spec.mesh is None:
+        mesh_fp = ("auto", len(jax.devices()), jax.default_backend())
+    else:
+        mesh_fp = (tuple((a, int(s)) for a, s in spec.mesh.shape.items()),
+                   tuple(int(d.id) for d in spec.mesh.devices.flat))
+    return ("batched" if batched else "single", spec.algorithm, spec.eps,
+            spec.rounds, spec.sample_per_shard, spec.adaptive,
+            spec.total_sample, spec.s, spec.exchange, spec.pair_factor,
+            spec.out_slack, spec.kernel_policy, names, sizes, mesh_fp,
+            tuple(enc.shape), str(enc.dtype))
+
+
 def _sort_impl(x, spec: SortSpec, want_indices: bool) -> SortOutput:
     part = get_partitioner(spec.algorithm)
     x = jnp.asarray(x)
     if x.ndim != 1:
         raise ValueError(f"sort expects a 1-D key array, got shape {x.shape}")
-    p = spec.mesh.devices.size if spec.mesh is not None else len(jax.devices())
-    axes = part.mesh_axes(spec, p)
-    names = tuple(a for a, _ in axes)
-    sizes = tuple(s for _, s in axes)
+    p, names, sizes = _mesh_axes(spec, part)
 
     plan = make_plan(x, spec, p, want_indices=want_indices)
     enc = plan.encode(x)
@@ -57,16 +79,87 @@ def _sort_impl(x, spec: SortSpec, want_indices: bool) -> SortOutput:
     raw = driver.run(
         lambda local, rng: part.sharded(local, rng, ctx),
         enc, mesh=spec.mesh, axis_names=names, sizes=sizes, seed=spec.seed,
-        n_real=plan.n, local_sort_fn=p1_sort)
+        n_real=plan.n, local_sort_fn=p1_sort,
+        cache_key=_cache_key(spec, names, sizes, enc, batched=False))
     return plan.decode(raw)
+
+
+def _sort_batched_impl(xs, spec: SortSpec,
+                       want_indices: bool) -> BatchedSortOutput:
+    part = get_partitioner(spec.algorithm)
+    if xs.ndim != 2:
+        raise ValueError(
+            f"sort_batched expects a (B, n) key array, got shape {xs.shape}")
+    if spec.initial_probes is not None:
+        raise NotImplementedError(
+            "warm-start probes are not supported on the batched path")
+    p, names, sizes = _mesh_axes(spec, part)
+
+    plan = make_plan(xs, spec, p, want_indices=want_indices)
+    enc = plan.encode(xs)
+    ctx = ShardCtx(spec=spec, axis_names=names, sizes=sizes, rng=None,
+                   initial_probes=None)
+    p1_sort = (jax.vmap(spec.local_sort_fn) if spec.local_sort_fn is not None
+               else dispatch.local_sort_batched_fn(spec.kernel_policy))
+    raw = driver.run_batched(
+        lambda local, rng: part.sharded_batched(local, rng, ctx),
+        enc, mesh=spec.mesh, axis_names=names, sizes=sizes, seed=spec.seed,
+        n_real=plan.n, local_sort_fn=p1_sort,
+        cache_key=_cache_key(spec, names, sizes, enc, batched=True))
+    return plan.decode_batched(raw)
+
+
+def _sort_batched_buckets(arrs, spec: SortSpec) -> list:
+    """List-of-arrays input: length-bucket, one single-launch batch per
+    distinct length, results back in input order as SortOutput views."""
+    from repro.sort.grouping import group_by_length
+    arrs = [jnp.asarray(a) for a in arrs]
+    for a in arrs:
+        if a.ndim != 1:
+            raise ValueError(
+                f"sort_batched list entries must be 1-D, got shape {a.shape}")
+    results = [None] * len(arrs)
+    for _, idxs in group_by_length(arrs).items():
+        out = _sort_batched_impl(jnp.stack([arrs[i] for i in idxs]), spec,
+                                 want_indices=False)
+        for j, i in enumerate(idxs):
+            results[i] = out.request(j)
+    return results
 
 
 def sort(x, spec: SortSpec | None = None, **overrides) -> SortOutput:
     """Sort a 1-D array of keys across the mesh. Returns a SortOutput whose
     `shards`/`counts` are the distributed result and `.gather()` the flat
     sorted array. Float keys and duplicate-heavy keys are handled by the
-    adapter layer automatically; see SortSpec for every knob."""
-    return _sort_impl(x, _as_spec(spec, overrides), want_indices=False)
+    adapter layer automatically; see SortSpec for every knob. With
+    `SortSpec(batch=True)` a (B, n) array routes through the batched
+    single-launch engine (see `sort_batched`)."""
+    spec = _as_spec(spec, overrides)
+    if spec.batch:
+        return sort_batched(x, spec)
+    return _sort_impl(x, spec, want_indices=False)
+
+
+def sort_batched(xs, spec: SortSpec | None = None, **overrides):
+    """Sort B independent key arrays in ONE shard_map launch.
+
+    xs: a (B, n) array (or anything stackable to one) of B equal-length
+    requests — returns a BatchedSortOutput — or a list/tuple of 1-D arrays
+    of arbitrary lengths, which is length-bucketed (one batched launch per
+    distinct length; `launch.serve.serve_bucketed`-style near-length
+    bucketing upstream maximizes sharing) and returns a list of per-request
+    SortOutputs in input order.
+
+    Per request the result is bit-identical to `sort()` on that request
+    with the same spec/seed, but a batch of B costs one launch, one
+    all_gather + one psum per splitter round, and (dense strategy) one
+    all_to_all — independent of B — plus a compiled-executable cache hit
+    for every shape bucket already seen (DESIGN.md Section 6).
+    """
+    spec = _as_spec(spec, overrides)
+    if isinstance(xs, (list, tuple)):
+        return _sort_batched_buckets(xs, spec)
+    return _sort_batched_impl(jnp.asarray(xs), spec, want_indices=False)
 
 
 def _exact_or_raise(out: "SortOutput", what: str) -> "SortOutput":

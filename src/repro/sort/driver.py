@@ -21,6 +21,12 @@ The shard-level contract: `sort_fn(local, rng)` returns
 `(out, n_valid, splitter_keys, splitter_ranks, overflow, stats)` where `out`
 is the shard's sentinel-padded sorted slice of static shape and `stats` is a
 `SplitterStats` (or any fixed pytree, replicated across shards).
+
+`run_batched` is the same skeleton with a leading batch dimension: B
+equal-length requests in one shard_map launch (DESIGN.md Section 6), with
+`sort_fn` receiving this shard's (B, n_local) block. Both entry points
+take a `cache_key` that opts into the compiled-executable cache
+(`exec_cache`) so steady-state serving never re-traces.
 """
 from __future__ import annotations
 
@@ -41,6 +47,67 @@ class MeshPlan(NamedTuple):
     axis_names: tuple     # mesh axes the sort spans, outermost first
     sizes: tuple          # per-axis sizes; p == prod(sizes)
     p: int
+
+
+class ExecutableCache:
+    """Compiled-executable cache for the sort drivers (DESIGN.md Sec. 6.3).
+
+    `run`/`run_batched` rebuild their shard_map'd callable per invocation, so
+    without this cache jax re-traces and re-compiles every call — a fresh
+    trace per serving request. The cache stores the *jitted callable* keyed
+    by everything that determines the traced program: shape bucket, dtype,
+    the SortSpec fingerprint, and the mesh fingerprint (the front-door
+    derives the key; see repro.sort.api). A hit reuses the callable object,
+    which makes the second call with the same shape bucket go straight to
+    jax's compiled-executable fast path — zero retracing (`traces` counts
+    actual trace-time executions of the shard body, so tests can pin this).
+
+    Input buffers are donated on backends that support donation (not CPU),
+    so steady-state serving re-uses the request buffer for the shard-padded
+    input instead of allocating per call.
+
+    The caller owns key correctness: a key must capture every closure the
+    sort_fn bakes into the program. Callers with unhashable/opaque state
+    (custom local_sort_fn, warm-start probes) pass cache_key=None and keep
+    today's per-call behavior.
+    """
+
+    def __init__(self, max_entries: int = 64):
+        self.max_entries = max_entries
+        self._fns = {}
+        self.hits = 0
+        self.misses = 0
+        self.traces = 0     # trace-time executions of driver shard bodies
+
+    def get_or_build(self, key, build):
+        if key is None:
+            return build()
+        fn = self._fns.get(key)
+        if fn is None:
+            self.misses += 1
+            if len(self._fns) >= self.max_entries:  # FIFO eviction
+                self._fns.pop(next(iter(self._fns)))
+            fn = self._fns[key] = build()
+        else:
+            self.hits += 1
+        return fn
+
+    def clear(self):
+        self._fns.clear()
+        self.hits = self.misses = self.traces = 0
+
+    def __len__(self):
+        return len(self._fns)
+
+
+exec_cache = ExecutableCache()
+
+
+def _jit_donated(fn):
+    """jit with the key-array input donated where the backend supports it
+    (donation is a no-op warning on CPU, so gate it off there)."""
+    donate = (0,) if jax.default_backend() != "cpu" else ()
+    return jax.jit(fn, donate_argnums=donate)
 
 
 def resolve_mesh(mesh, axis_names, sizes=None) -> MeshPlan:
@@ -136,7 +203,7 @@ def strip_sentinel_counts(shards, counts, n_pad=0, n_restore=None):
 
 
 def run(sort_fn, x, *, mesh=None, axis_names=("sort",), sizes=None, seed=0,
-        n_real=None, local_sort_fn=None):
+        n_real=None, local_sort_fn=None, cache_key=None):
     """Run a shard-level sort over a mesh; returns the raw 6-tuple with
     leading (p, ...) shard dims: (shards, counts, keys, ranks, overflow,
     stats). Inputs the driver itself had to sentinel-pad get their counts
@@ -145,7 +212,9 @@ def run(sort_fn, x, *, mesh=None, axis_names=("sort",), sizes=None, seed=0,
     `n_real` (default: len(x)) is the non-pad key count for the p==1 path,
     and `local_sort_fn` (default jnp.sort) is what that path runs — callers
     with a kernel_policy pass a dispatch-routed sort so a single-device
-    mesh still honors the policy.
+    mesh still honors the policy. `cache_key` (hashable) opts into the
+    compiled-executable cache: it must capture everything `sort_fn` bakes
+    into the trace (see ExecutableCache).
     """
     plan = resolve_mesh(mesh, axis_names, sizes)
     p = plan.p
@@ -163,29 +232,104 @@ def run(sort_fn, x, *, mesh=None, axis_names=("sort",), sizes=None, seed=0,
     xs = x.reshape(plan.sizes + (n_local,))
     naxes = len(plan.axis_names)
 
-    def per_shard(block, key):
-        local = block.reshape(-1)
-        me = jnp.int32(0)
-        for name, size in zip(plan.axis_names, plan.sizes):
-            me = me * size + jax.lax.axis_index(name)
-        rng = jr.fold_in(key, me)
-        out, n_valid, keys, ranks, ovf, stats = sort_fn(local, rng)
-        lead = (1,) * naxes
-        return (out.reshape(lead + out.shape),
-                jnp.asarray(n_valid, jnp.int32).reshape(lead),
-                keys, ranks, ovf, stats)
+    def build():
+        def per_shard(block, key):
+            exec_cache.traces += 1
+            local = block.reshape(-1)
+            me = jnp.int32(0)
+            for name, size in zip(plan.axis_names, plan.sizes):
+                me = me * size + jax.lax.axis_index(name)
+            rng = jr.fold_in(key, me)
+            out, n_valid, keys, ranks, ovf, stats = sort_fn(local, rng)
+            lead = (1,) * naxes
+            return (out.reshape(lead + out.shape),
+                    jnp.asarray(n_valid, jnp.int32).reshape(lead),
+                    keys, ranks, ovf, stats)
 
-    sharded = P(*plan.axis_names)
-    shmap = shard_map(
-        per_shard, mesh=plan.mesh,
-        in_specs=(sharded, P()),
-        out_specs=(sharded, sharded, P(), P(), P(), P()))
-    out, counts, keys, ranks, ovf, stats = jax.jit(shmap)(xs, jr.key(seed))
+        sharded = P(*plan.axis_names)
+        return _jit_donated(shard_map(
+            per_shard, mesh=plan.mesh,
+            in_specs=(sharded, P()),
+            out_specs=(sharded, sharded, P(), P(), P(), P())))
+
+    fn = exec_cache.get_or_build(cache_key, build)
+    out, counts, keys, ranks, ovf, stats = fn(xs, jr.key(seed))
     out = out.reshape((p,) + out.shape[naxes:])
     counts = counts.reshape(p)
     if n_pad:   # our sentinel pads may have been counted as keys
         counts = strip_sentinel_counts(out, counts, n_pad=n_pad,
                                        n_restore=n_sent_real)
+    return out, counts, keys, ranks, ovf, stats
+
+
+def run_batched(sort_fn, xs, *, mesh=None, axis_names=("sort",), sizes=None,
+                seed=0, n_real=None, local_sort_fn=None, cache_key=None):
+    """Run B independent shard-level sorts in ONE shard_map launch.
+
+    xs is (B, n): B equal-length key arrays. `sort_fn(local, rng)` receives
+    this shard's (B, n_local) slice of every request and must return the
+    batched 6-tuple ((B, out_cap), (B,), (B, p-1), (B, p-1), (B,), stats)
+    — i.e. a `Partitioner.sharded_batched`. Returns the raw batched tuple
+    (shards (B, p, out_cap), counts (B, p), keys (B, p-1), ranks (B, p-1),
+    overflow (B,), stats).
+
+    Layout: each shard holds a contiguous (B, n_local) column block, so
+    request b's keys land on the same shards as an unbatched sort of row b
+    — which is what makes the batched result bit-identical per request.
+    `local_sort_fn` here is the *batched* (B, n) -> (B, n) local sort for
+    the p == 1 short-circuit. `cache_key`: see `run`.
+    """
+    plan = resolve_mesh(mesh, axis_names, sizes)
+    p = plan.p
+    batch, n = xs.shape
+    n_real = n if n_real is None else n_real
+    if p == 1:
+        out = (local_sort_fn or (lambda v: jnp.sort(v, axis=-1)))(xs)
+        return (out[:, None, :], jnp.full((batch, 1), n_real, jnp.int32),
+                jnp.zeros((batch, 0), xs.dtype),
+                jnp.zeros((batch, 0), jnp.int32),
+                jnp.zeros((batch,), jnp.int32), None)
+    n_sent_real = None
+    n_pad = (-n) % p
+    if n_pad:   # per-request sentinel-valued data keys, counted pre-pad
+        n_sent_real = jnp.sum((xs == hi_sentinel(xs.dtype)).astype(jnp.int32),
+                              axis=1)
+        xs = jnp.concatenate(
+            [xs, jnp.full((batch, n_pad), hi_sentinel(xs.dtype), xs.dtype)],
+            axis=1)
+    n_local = (n + n_pad) // p
+    xsr = xs.reshape((batch,) + plan.sizes + (n_local,))
+    naxes = len(plan.axis_names)
+
+    def build():
+        def per_shard(block, key):
+            exec_cache.traces += 1
+            local = block.reshape(batch, n_local)
+            me = jnp.int32(0)
+            for name, size in zip(plan.axis_names, plan.sizes):
+                me = me * size + jax.lax.axis_index(name)
+            rng = jr.fold_in(key, me)
+            out, n_valid, keys, ranks, ovf, stats = sort_fn(local, rng)
+            lead = (1,) * naxes
+            return (out.reshape((batch,) + lead + out.shape[1:]),
+                    jnp.asarray(n_valid, jnp.int32).reshape((batch,) + lead),
+                    keys, ranks, ovf, stats)
+
+        sharded = P(None, *plan.axis_names)
+        return _jit_donated(shard_map(
+            per_shard, mesh=plan.mesh,
+            in_specs=(sharded, P()),
+            out_specs=(sharded, sharded, P(), P(), P(), P())))
+
+    fn = exec_cache.get_or_build(cache_key, build)
+    out, counts, keys, ranks, ovf, stats = fn(xsr, jr.key(seed))
+    out = out.reshape((batch, p) + out.shape[1 + naxes:])
+    counts = counts.reshape(batch, p)
+    if n_pad:   # our sentinel pads may have been counted as keys
+        counts = jax.vmap(
+            lambda s, c, nr: strip_sentinel_counts(s, c, n_pad=n_pad,
+                                                   n_restore=nr)
+        )(out, counts, n_sent_real)
     return out, counts, keys, ranks, ovf, stats
 
 

@@ -13,6 +13,22 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
+def group_by_length(seqs) -> dict:
+    """Group request indices by exact key-array length.
+
+    The batched sort engine's bucketing policy: requests of equal length
+    stack into one (B, n) batch and share a single launch + one compiled
+    executable per shape bucket (repro.sort.sort_batched). Returns
+    {length: [request indices]} in first-seen order. Near-length queues
+    should be quantized upstream (launch.serve.serve_bucketed pads to a
+    length multiple) so the buckets actually coalesce.
+    """
+    groups: dict = {}
+    for i, s in enumerate(seqs):
+        groups.setdefault(int(s.shape[0]), []).append(i)
+    return groups
+
+
 def group_slots(sorted_group_ids, n_groups: int, capacity: int):
     """Positions of already-sorted group ids within per-group capacity bins.
 

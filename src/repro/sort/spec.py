@@ -44,6 +44,15 @@ class SortSpec:
       outer_axis / inner_axis  multistage: the two nested mesh axes. When
                      `mesh` is None the driver factors p into (r1, r2) itself.
 
+    Batched execution (DESIGN.md Section 6):
+      batch          True => `sort()` accepts a (B, n) array of B
+                     independent requests and routes it through the batched
+                     single-launch engine (`repro.sort.sort_batched`): one
+                     shard_map launch, one all_gather + one psum per
+                     splitter round and one all_to_all for the dense
+                     exchange regardless of B, plus the compiled-executable
+                     cache. `sort_batched` itself ignores this flag.
+
     Semantics:
       stable         True => implicit duplicate tagging (paper Sec. 6.3) is
                      applied so equal keys keep input order and original
@@ -88,6 +97,8 @@ class SortSpec:
     axis_name: str = "sort"
     outer_axis: str = "outer"
     inner_axis: str = "inner"
+    # batched execution
+    batch: bool = False
     # semantics
     stable: bool = False
     tag: bool | None = None

@@ -188,3 +188,75 @@ def test_exchange_merge_policies_agree(rng):
     b = sort(jnp.asarray(x), SortSpec(kernel_policy="pallas", tag=False))
     np.testing.assert_array_equal(np.asarray(a.shards), np.asarray(b.shards))
     np.testing.assert_array_equal(np.asarray(a.counts), np.asarray(b.counts))
+
+
+# ------------------------------------------------- batched kernels (Sec 6.2)
+@pytest.mark.parametrize("dtype", [np.int32, np.uint32, np.float32])
+def test_batched_local_sort_matches_rows(rng, dtype):
+    # batch grid dimension: B rows, one launch per pass, per-row parity
+    xs = _keys(rng, 3 * 1000, dtype).reshape(3, 1000)
+    got = bops.local_sort_batched(jnp.asarray(xs), block=64, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.sort(xs, axis=1))
+
+
+def test_batched_probe_ranks_matches_unbatched(rng):
+    from repro.kernels.histogram import ops as hops
+    keys = _keys(rng, 3 * 777, np.int32).reshape(3, 777)
+    probes = np.sort(_keys(rng, 3 * 33, np.int32).reshape(3, 33), axis=1)
+    got = hops.probe_ranks_batched(jnp.asarray(keys), jnp.asarray(probes),
+                                   interpret=True)
+    for b in range(3):
+        np.testing.assert_array_equal(
+            np.asarray(got[b]),
+            np.asarray(hops.probe_ranks(jnp.asarray(keys[b]),
+                                        jnp.asarray(probes[b]),
+                                        interpret=True)))
+
+
+@pytest.mark.parametrize("k,r", [(1, 64), (5, 37), (16, 32)])
+def test_batched_merge_runs_matches_oracle(rng, k, r):
+    runs = np.stack([_sorted_runs(rng, k, r, np.int32) for _ in range(3)])
+    got = mops.merge_sorted_runs_batched(jnp.asarray(runs), interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.sort(runs.reshape(3, -1), axis=1))
+
+
+def test_batched_dispatch_policies_bit_identical(rng):
+    xs = jnp.asarray(_keys(rng, 4 * 500, np.int32).reshape(4, 500))
+    np.testing.assert_array_equal(
+        np.asarray(dispatch.local_sort_batched(xs, policy="pallas")),
+        np.asarray(dispatch.local_sort_batched(xs, policy="xla")))
+
+
+def test_front_door_sort_batched_with_pallas_policy(rng):
+    # the whole batched pipeline on the Pallas path, interpret mode
+    from repro.sort import SortSpec, sort_batched
+    xs = np.stack([rng.permutation(8 * 64).astype(np.int32)
+                   for _ in range(2)])
+    out = sort_batched(jnp.asarray(xs),
+                       SortSpec(kernel_policy="pallas", tag=False))
+    for b in range(2):
+        np.testing.assert_array_equal(out.gather(b), np.sort(xs[b]))
+
+
+@pytest.mark.parametrize("slot,spills", [(64, False), (16, True)])
+def test_batched_merge_ragged_matches_oracle(rng, slot, spills):
+    # per-row ragged runs at different traced offsets; the spill case takes
+    # the batch-wide full-sort fallback
+    per_row = [[20, 0, 44, 7], [3, 31, 1, 9], [40, 40, 8, 16]]
+    bufs, starts, cnts = zip(*[_ragged_buf(rng, 128, c, np.int32)
+                               for c in per_row])
+    buf = np.stack(bufs)
+    got = mops.merge_ragged_runs_batched(
+        jnp.asarray(buf), jnp.stack(starts), jnp.stack(cnts), slot=slot,
+        interpret=True)
+    assert spills == any(max(c) > slot for c in per_row)
+    np.testing.assert_array_equal(np.asarray(got), np.sort(buf, axis=1))
+    # dispatch wrapper parity against the XLA path
+    np.testing.assert_array_equal(
+        np.asarray(dispatch.merge_ragged_batched(
+            jnp.asarray(buf), jnp.stack(starts), jnp.stack(cnts),
+            policy="pallas", slot=slot)),
+        np.asarray(dispatch.merge_ragged_batched(
+            jnp.asarray(buf), jnp.stack(starts), jnp.stack(cnts),
+            policy="xla")))
