@@ -1,0 +1,82 @@
+"""Serving-layer bench: dynamic-batching throughput vs caller concurrency.
+
+Rows feed `BENCH_serve.json` (report-only in the regression guard — the
+serving path stacks thread scheduling + asyncio on top of the engine, too
+noisy for a hard gate, but the trajectory shows whether batching keeps
+paying):
+
+  serve/warm_latency_c1   mean warm request latency, one blocking caller
+                          (every batch has occupancy 1 — the latency floor)
+  serve/throughput_c8     64 requests from 8 concurrent callers
+  serve/throughput_c32    64 requests from 32 concurrent callers (derived
+                          carries req/s, mean batch occupancy, and the
+                          exec-cache hit rate — occupancy should rise with
+                          concurrency while us/req falls)
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.serve import ServiceConfig, ServiceRunner
+from repro.sort import SortSpec, sort_batched
+
+N = 8 * 256
+LOAD = 64
+SPEC = SortSpec(exchange="allgather", tag=False)
+CONFIG = ServiceConfig(max_batch=8, max_delay_ms=5.0)
+
+
+def _warm(rng) -> None:
+    # compile every (N, padded-B) executable the service can dispatch so
+    # the rows time steady-state serving, not compilation
+    b = 1
+    while b <= CONFIG.max_batch:
+        xs = np.stack([rng.permutation(4 * N)[:N].astype(np.int32)
+                       for _ in range(b)])
+        sort_batched(jnp.asarray(xs), SPEC)
+        b *= 2
+
+
+def _drive(inputs, concurrency: int):
+    """(wall_s, metrics snapshot) for LOAD requests at the given caller
+    concurrency through a fresh runner (warm cache, fresh metrics)."""
+    with ServiceRunner(spec=SPEC, config=CONFIG) as runner:
+        runner.submit(inputs[0])          # touch the path once, then reset
+        runner.reset_metrics()
+        t0 = time.perf_counter()
+        with ThreadPoolExecutor(concurrency) as pool:
+            list(pool.map(runner.submit, inputs))
+        wall = time.perf_counter() - t0
+        return wall, runner.metrics()
+
+
+def _row(name, wall, snap, detail):
+    buckets = snap["buckets"].values()
+    occ = (sum(b["mean_occupancy"] * b["batches"] for b in buckets) /
+           max(snap["batches"], 1))
+    hits = sum(b["cache"]["hits"] for b in buckets)
+    misses = sum(b["cache"]["misses"] for b in buckets)
+    return (name, round(wall / LOAD * 1e6, 1),
+            f"{detail} req/s={LOAD / wall:.0f} occupancy={occ:.1f} "
+            f"hit_rate={hits / max(hits + misses, 1):.2f}")
+
+
+def run():
+    rng = np.random.default_rng(0)
+    _warm(rng)
+    inputs = [rng.permutation(4 * N)[:N].astype(np.int32)
+              for _ in range(LOAD)]
+
+    rows = []
+    wall, snap = _drive(inputs, 1)
+    rows.append(_row("serve/warm_latency_c1", wall, snap,
+                     f"n={N} int32 c=1"))
+    for c in (8, 32):
+        wall, snap = _drive(inputs, c)
+        rows.append(_row(f"serve/throughput_c{c}", wall, snap,
+                         f"n={N} int32 c={c}"))
+    return rows

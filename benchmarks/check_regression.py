@@ -9,8 +9,9 @@ any kernel row slowed down by more than the threshold (default 25%).
 
 Only BENCH_kernels.json rows gate by default — the kernel microbenches are
 compiled single-op timings, stable enough for a hard bar; the end-to-end
-BENCH_sort.json rows (driver + adapter + collectives) are reported for the
-trajectory but do not fail the build. Rows missing from either side (newly
+BENCH_sort.json rows (driver + adapter + collectives) and the
+BENCH_serve.json rows (thread scheduling + asyncio on top) are reported
+for the trajectory but do not fail the build. Rows missing from either side (newly
 added or renamed benches) are skipped with a note.
 
 Noise handling: committed baselines and CI runs come from different
@@ -94,7 +95,8 @@ def main() -> None:
     ap.add_argument("--no-retry", action="store_true",
                     help="fail on first-pass timings without a re-run")
     ap.add_argument("--files", nargs="*",
-                    default=["BENCH_kernels.json", "BENCH_sort.json"])
+                    default=["BENCH_kernels.json", "BENCH_sort.json",
+                             "BENCH_serve.json"])
     args = ap.parse_args()
 
     print("name,baseline_us,current_us,ratio,status")

@@ -36,6 +36,7 @@ BENCHES = [
     ("fig7", "benchmarks.bench_fig7_application"),
     ("kernels", "benchmarks.bench_kernels"),
     ("sort", "benchmarks.bench_sort"),
+    ("serve", "benchmarks.bench_serve"),
     ("moe", "benchmarks.bench_moe_dispatch"),
     ("sortcoll", "benchmarks.bench_sort_collectives"),
     ("roofline", "benchmarks.roofline"),
@@ -77,6 +78,8 @@ def main() -> None:
                 _write_json("BENCH_kernels.json", key, rows)
             if key == "sort":
                 _write_json("BENCH_sort.json", key, rows)
+            if key == "serve":
+                _write_json("BENCH_serve.json", key, rows)
             print(f"# {key}: {time.time()-t0:.1f}s", flush=True)
         except Exception:
             failures += 1

@@ -1,0 +1,111 @@
+"""Load generator for the sort-as-a-service HTTP front end.
+
+Start a server (in another terminal, or let this script spawn one
+in-process with --inprocess):
+
+    PYTHONPATH=src python -m repro.serve.http --port 8080
+
+then drive it:
+
+    PYTHONPATH=src python examples/sort_load.py --base http://127.0.0.1:8080 \
+        --requests 128 --concurrency 16 --sizes 256,384
+
+Prints client-side latency percentiles plus the server's /metrics view of
+the same window (batch occupancy, flush reasons, executable-cache rates) —
+run it twice to see the cold-compile first wave turn into all-hit serving.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+
+def post(base, route, payload, timeout=120):
+    req = urllib.request.Request(
+        base + route, data=json.dumps(payload).encode(),
+        headers={"Content-Type": "application/json"}, method="POST")
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as resp:
+            return resp.status, json.loads(resp.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read() or b"{}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description="sort service load generator")
+    ap.add_argument("--base", default="http://127.0.0.1:8080")
+    ap.add_argument("--requests", type=int, default=128)
+    ap.add_argument("--concurrency", type=int, default=16)
+    ap.add_argument("--sizes", default="256,384",
+                    help="comma-separated request lengths to mix")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--inprocess", action="store_true",
+                    help="spawn the server in this process (no --base needed)")
+    args = ap.parse_args()
+
+    server = None
+    if args.inprocess:
+        from repro.serve import ServiceConfig, ServiceRunner
+        from repro.serve.http import make_server
+        from repro.sort import SortSpec
+        runner = ServiceRunner(spec=SortSpec(exchange="allgather", tag=False),
+                               config=ServiceConfig(max_batch=8))
+        server = make_server(runner, port=0)
+        threading.Thread(target=server.serve_forever, daemon=True).start()
+        host, port = server.server_address[:2]
+        args.base = f"http://{host}:{port}"
+        print(f"in-process server at {args.base}")
+
+    sizes = [int(s) for s in args.sizes.split(",")]
+    rng = np.random.default_rng(args.seed)
+    inputs = [rng.permutation(4 * sizes[i % len(sizes)])
+              [:sizes[i % len(sizes)]].astype(np.int32)
+              for i in range(args.requests)]
+
+    lat, codes = [], {}
+
+    def one(x):
+        t0 = time.perf_counter()
+        status, body = post(args.base, "/v1/sort",
+                            {"keys": x.tolist(), "dtype": "int32"})
+        lat.append(time.perf_counter() - t0)
+        codes[status] = codes.get(status, 0) + 1
+        if status == 200:
+            np.testing.assert_array_equal(
+                np.asarray(body["sorted"], np.int32), np.sort(x))
+
+    t0 = time.perf_counter()
+    with ThreadPoolExecutor(args.concurrency) as pool:
+        list(pool.map(one, inputs))
+    wall = time.perf_counter() - t0
+
+    ms = sorted(1e3 * t for t in lat)
+    print(f"{args.requests} requests, c={args.concurrency}: "
+          f"{args.requests / wall:.0f} req/s, status codes {codes}")
+    print(f"client latency ms: p50={ms[len(ms) // 2]:.1f} "
+          f"p99={ms[min(len(ms) - 1, int(0.99 * len(ms)))]:.1f} "
+          f"max={ms[-1]:.1f}")
+
+    snap = json.loads(urllib.request.urlopen(
+        args.base + "/metrics", timeout=30).read())
+    print(f"server: served={snap['served']} batches={snap['batches']} "
+          f"rejected={snap['rejected']}")
+    for key, b in snap["buckets"].items():
+        print(f"  bucket {key}: occupancy {b['mean_occupancy']:.1f}, "
+              f"flushes {b['flush_reasons']}, cache {b['cache']}")
+    if server is not None:
+        server.shutdown()
+        runner.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,7 @@
-"""Serve a small model with batched requests + the sorting service together:
-a decode loop (mamba2-family, O(1) state) whose per-step request batching is
-managed by HSS length bucketing — the paper's partitioning running inside a
-serving system, all through the `repro.sort` front-door.
+"""Sorting as a service, end to end: the async serving layer (repro.serve)
+batching concurrent sort requests through the warm executable cache, then
+the same bucketing machinery managing a small model's decode batches — the
+paper's partitioning running inside a serving system.
 
     PYTHONPATH=src python examples/sort_service.py
 """
@@ -9,14 +9,38 @@ import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
+from concurrent.futures import ThreadPoolExecutor
+
 import numpy as np
 
-from repro.configs import smoke_config
-from repro.data.partition import bucket_lengths
-from repro.launch.serve import serve_bucketed
+print("== sort-as-a-service: dynamic batching over the executable cache ==")
+from repro.serve import ServiceConfig, ServiceRunner
+from repro.sort import SortSpec
+
+rng = np.random.default_rng(0)
+spec = SortSpec(exchange="allgather", tag=False)
+config = ServiceConfig(max_batch=8, max_delay_ms=5.0)
+n = 8 * 64
+inputs = [rng.permutation(4 * n)[:n].astype(np.int32) for _ in range(32)]
+
+with ServiceRunner(spec=spec, config=config) as runner:
+    with ThreadPoolExecutor(8) as pool:          # 8 concurrent "clients"
+        results = list(pool.map(runner.submit, inputs))
+    for x, got in zip(inputs, results):
+        np.testing.assert_array_equal(got, np.sort(x))
+    snap = runner.metrics()
+    print(f"  served {snap['served']} requests in {snap['batches']} batches")
+    for key, b in snap["buckets"].items():
+        print(f"  bucket {key}: mean occupancy {b['mean_occupancy']:.1f}, "
+              f"flushes {b['flush_reasons']}, "
+              f"p50 {b['latency_ms']['p50']:.1f} ms")
+    cache = snap["exec_cache"]
+    print(f"  exec cache: {cache['hits']} hits / {cache['misses']} misses "
+          f"({cache['size']} executables resident)")
 
 print("== HSS request bucketing ==")
-rng = np.random.default_rng(0)
+from repro.data.partition import bucket_lengths
+
 req_lens = rng.lognormal(4.5, 0.8, size=512).clip(8, 512).astype(np.int32)
 shards, counts = bucket_lengths(req_lens, n_shards=4)
 for i, s in enumerate(shards):
@@ -25,6 +49,9 @@ for i, s in enumerate(shards):
           f"{req_lens[s].max() if s.size else 0}]")
 
 print("== bucketed decode (mamba2-family smoke model) ==")
+from repro.configs import smoke_config
+from repro.launch.serve import serve_bucketed
+
 cfg = smoke_config("mamba2-370m")
 lens = rng.lognormal(3.0, 0.4, size=16).clip(8, 48).astype(np.int32)
 results, totals = serve_bucketed(cfg, prompt_lens=lens, gen=8, n_buckets=2)

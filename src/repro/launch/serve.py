@@ -7,6 +7,11 @@
 request queues are partitioned into contiguous-length buckets through the
 `repro.sort` front-door (HSS length bucketing, DESIGN.md Section 4.2) so
 each serving batch pads only to its own bucket's max length.
+
+`--sort-service` instead launches the sort-as-a-service HTTP front end
+(repro.serve.http, DESIGN.md Section 7); all other flags pass through:
+
+    PYTHONPATH=src python -m repro.launch.serve --sort-service --port 8080
 """
 from __future__ import annotations
 
@@ -104,7 +109,15 @@ def serve_bucketed(cfg, *, prompt_lens, gen: int, n_buckets: int = 0,
     return results, totals
 
 
-def main():
+def main(argv=None):
+    import sys
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if "--sort-service" in argv:
+        # sort-as-a-service front end (repro.serve.http): every other flag
+        # is passed through, e.g.
+        #   python -m repro.launch.serve --sort-service --port 8080
+        from repro.serve.http import main as http_main
+        return http_main([a for a in argv if a != "--sort-service"])
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
@@ -114,7 +127,7 @@ def main():
     ap.add_argument("--bucket", type=int, default=0, metavar="N_REQUESTS",
                     help="serve N lognormal-length requests via HSS "
                          "length bucketing instead of one uniform batch")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.bucket:
         lens = np.random.default_rng(0).lognormal(

@@ -11,7 +11,10 @@ StepTimer keeps an EWMA of step wall time and flags stragglers (steps slower
 than `threshold` x the EWMA) — at the data layer, HSS itself is the
 mitigation: globally balanced partitions mean no shard is a long pole in the
 exchange, and iterative re-splitting (warm-started splitters) adapts to
-drifting key distributions between steps.
+drifting key distributions between steps. The sort-serving layer
+(repro.serve.metrics) reuses the same EWMA over batch dispatch times, so a
+slow batch — a cold compile, a noisy neighbor — raises the same straggler
+signal the train loop gets.
 """
 from __future__ import annotations
 
@@ -40,6 +43,16 @@ class StepTimer:
         self.stragglers += int(slow)
         self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
         return slow
+
+    def snapshot(self) -> dict:
+        """Counter view for metrics registries (plain dict, JSON-safe)."""
+        return {"steps": self.steps, "ewma_s": self.ewma,
+                "stragglers": self.stragglers, "threshold": self.threshold}
+
+    def reset(self) -> None:
+        self.ewma = 0.0
+        self.stragglers = 0
+        self.steps = 0
 
 
 class TrainSupervisor:

@@ -1,0 +1,55 @@
+"""repro.serve — async sort-as-a-service over the batched engine.
+
+The serving layer the batched single-launch engine (DESIGN.md Section 6)
+was built for: an asyncio request queue that admits `sort`/`argsort`/
+`sort_kv` requests, buckets them by shape/dtype/spec (the same key family
+the compiled-executable cache uses), flushes each bucket on
+batch-size-or-deadline, dispatches ONE `sort_batched` launch per batch,
+and resolves per-request futures in input order — with admission control,
+per-request deadlines, graceful drain, a metrics registry, and a
+stdlib-only HTTP front end. DESIGN.md Section 7 documents the lifecycle.
+
+    from repro.serve import ServiceConfig, SortService
+    from repro.sort import SortSpec
+
+    async with SortService(spec=SortSpec(exchange="allgather")) as svc:
+        out = await svc.submit(keys)              # sorted NumPy array
+
+Threaded callers (HTTP, benchmarks) use `ServiceRunner`; the front end is
+`python -m repro.serve.http`; `python -m repro.serve.smoke` is the CI
+end-to-end check.
+"""
+import importlib
+
+from repro.serve.errors import (
+    DeadlineExceeded, Overloaded, ServeError, ServiceClosed)
+
+# Submodules are imported lazily (PEP 562): `repro.serve.service` pulls in
+# jax, and jax snapshots XLA_FLAGS at import time — entry points like
+# `python -m repro.serve.smoke` must be able to set the device-count flag
+# in their module body, which runs AFTER this package __init__.
+_LAZY = {
+    "DynamicBatcher": "repro.serve.batcher",
+    "Request": "repro.serve.batcher",
+    "MetricsRegistry": "repro.serve.metrics",
+    "ServiceConfig": "repro.serve.service",
+    "ServiceRunner": "repro.serve.service",
+    "SortService": "repro.serve.service",
+}
+
+__all__ = [
+    "DeadlineExceeded", "DynamicBatcher", "MetricsRegistry", "Overloaded",
+    "Request", "ServeError", "ServiceClosed", "ServiceConfig",
+    "ServiceRunner", "SortService",
+]
+
+
+def __getattr__(name: str):
+    module = _LAZY.get(name)
+    if module is None:
+        raise AttributeError(f"module 'repro.serve' has no attribute {name!r}")
+    return getattr(importlib.import_module(module), name)
+
+
+def __dir__():
+    return sorted(__all__)

@@ -1,0 +1,219 @@
+"""Thin stdlib-only HTTP front end over `SortService` (DESIGN.md Sec. 7.4).
+
+    PYTHONPATH=src python -m repro.serve.http --port 8080 \
+        --exchange allgather --max-batch 8 --max-delay-ms 5
+
+Endpoints (JSON in, JSON out):
+
+  POST /v1/sort     {"keys": [...], "dtype": "int32", "timeout_ms": 100,
+                     "spec": {"algorithm": "hss", ...}}  -> {"sorted": [...]}
+  POST /v1/argsort  same body                        -> {"indices": [...]}
+  POST /v1/sort_kv  + "values": [...]          -> {"keys": ..., "values": ...}
+  GET  /metrics     MetricsRegistry snapshot (per-bucket + exec-cache)
+  POST /metrics/reset
+  GET  /healthz
+
+Status mapping of the typed service errors: Overloaded -> 429,
+DeadlineExceeded -> 504, ServiceClosed -> 503, bad request -> 400.
+
+`ThreadingHTTPServer` gives one thread per connection; every handler
+blocks on `ServiceRunner.submit`, so concurrency here is exactly the
+concurrent-caller pressure the dynamic batcher coalesces. This front end
+is deliberately minimal — it exists so the batching/admission layer can
+be load-tested end to end (examples/sort_load.py, repro.serve.smoke)
+without pulling a web framework into the image.
+"""
+from __future__ import annotations
+
+import os
+
+if __name__ == "__main__":
+    # entry-point runs simulate 8 host devices unless the caller chose
+    # otherwise; must happen before jax (imported below via the service)
+    # snapshots XLA_FLAGS. Programmatic importers own their own env.
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import dataclasses
+import json
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+import numpy as np
+
+from repro.serve.errors import DeadlineExceeded, Overloaded, ServiceClosed
+from repro.serve.service import ServiceConfig, ServiceRunner
+from repro.sort import SortSpec
+
+# spec fields a request may override; everything placement/callable-
+# valued stays server-side
+SPEC_FIELDS = ("algorithm", "eps", "rounds", "sample_per_shard", "adaptive",
+               "total_sample", "s", "exchange", "pair_factor", "out_slack",
+               "stable", "tag", "seed", "kernel_policy")
+
+_ROUTES = {"/v1/sort": "sort", "/v1/argsort": "argsort",
+           "/v1/sort_kv": "sort_kv"}
+
+
+class BadRequest(ValueError):
+    pass
+
+
+def _parse_keys(body: dict) -> np.ndarray:
+    keys = body.get("keys")
+    if not isinstance(keys, list) or not keys:
+        raise BadRequest("'keys' must be a non-empty list")
+    dtype = body.get("dtype")
+    if dtype is None:
+        dtype = ("float32" if any(isinstance(k, float) for k in keys)
+                 else "int32")
+    try:
+        return np.asarray(keys, dtype=np.dtype(dtype))
+    except (TypeError, ValueError) as e:
+        raise BadRequest(f"bad keys/dtype: {e}") from e
+
+
+def _parse_spec(body: dict, base: SortSpec) -> SortSpec | None:
+    overrides = body.get("spec")
+    if overrides is None:
+        return None
+    if not isinstance(overrides, dict):
+        raise BadRequest("'spec' must be an object")
+    unknown = set(overrides) - set(SPEC_FIELDS)
+    if unknown:
+        raise BadRequest(f"unknown spec fields {sorted(unknown)}; "
+                         f"allowed: {list(SPEC_FIELDS)}")
+    try:
+        return dataclasses.replace(base, **overrides)
+    except (TypeError, ValueError) as e:
+        raise BadRequest(f"bad spec: {e}") from e
+
+
+def make_handler(runner: ServiceRunner, *, verbose: bool = False):
+    class Handler(BaseHTTPRequestHandler):
+        protocol_version = "HTTP/1.1"
+
+        def log_message(self, fmt, *args):
+            if verbose:
+                super().log_message(fmt, *args)
+
+        def _reply(self, code: int, payload: dict) -> None:
+            data = json.dumps(payload).encode()
+            self.send_response(code)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(data)))
+            self.end_headers()
+            self.wfile.write(data)
+
+        def do_GET(self):
+            if self.path == "/healthz":
+                self._reply(200, {"ok": True})
+            elif self.path == "/metrics":
+                self._reply(200, runner.metrics())
+            else:
+                self._reply(404, {"error": f"no such route {self.path}"})
+
+        def do_POST(self):
+            if self.path == "/metrics/reset":
+                runner.reset_metrics()
+                self._reply(200, {"ok": True})
+                return
+            kind = _ROUTES.get(self.path)
+            if kind is None:
+                self._reply(404, {"error": f"no such route {self.path}"})
+                return
+            try:
+                length = int(self.headers.get("Content-Length", 0))
+                body = json.loads(self.rfile.read(length) or b"{}")
+                if not isinstance(body, dict):
+                    raise BadRequest("body must be a JSON object")
+                x = _parse_keys(body)
+                spec = _parse_spec(body, runner.service.spec)
+                timeout_ms = body.get("timeout_ms")
+                values = None
+                if kind == "sort_kv":
+                    values = np.asarray(body.get("values"))
+                result = runner.submit(
+                    x, kind=kind, values=values, spec=spec,
+                    timeout=None if timeout_ms is None else timeout_ms / 1e3)
+            except (BadRequest, ValueError, json.JSONDecodeError) as e:
+                self._reply(400, {"error": str(e)})
+            except Overloaded as e:
+                self._reply(429, {"error": str(e), "queued": e.queued,
+                                  "in_flight": e.in_flight})
+            except DeadlineExceeded as e:
+                self._reply(504, {"error": str(e)})
+            except ServiceClosed as e:
+                self._reply(503, {"error": str(e)})
+            except Exception as e:   # batch-level failure
+                self._reply(500, {"error": f"{type(e).__name__}: {e}"})
+            else:
+                if kind == "sort":
+                    self._reply(200, {"sorted": result.tolist()})
+                elif kind == "argsort":
+                    self._reply(200, {"indices": result.tolist()})
+                else:
+                    k, v = result
+                    self._reply(200, {"keys": k.tolist(),
+                                      "values": v.tolist()})
+
+    return Handler
+
+
+def make_server(runner: ServiceRunner, *, host: str = "127.0.0.1",
+                port: int = 0, verbose: bool = False) -> ThreadingHTTPServer:
+    """Build (but do not start) the HTTP server; port 0 picks a free one
+    (`server.server_address[1]` is the bound port)."""
+    server = ThreadingHTTPServer((host, port),
+                                 make_handler(runner, verbose=verbose))
+    server.daemon_threads = True
+    return server
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description="sort-as-a-service front end")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8080)
+    ap.add_argument("--algorithm", default="hss")
+    ap.add_argument("--exchange", default="dense",
+                    choices=["dense", "ragged", "allgather"])
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-delay-ms", type=float, default=5.0)
+    ap.add_argument("--max-queue-depth", type=int, default=256)
+    ap.add_argument("--max-in-flight", type=int, default=2)
+    ap.add_argument("--timeout-ms", type=float, default=None,
+                    help="default per-request deadline")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    import jax
+    if jax.default_backend() == "cpu" and jax.device_count() == 1:
+        # the p == 1 driver short-circuit serves correct results but
+        # bypasses the executable cache — batching buys nothing there
+        print("warning: single CPU device (jax read XLA_FLAGS before it "
+              "was set?) — run `python -m repro.serve.http`, or export "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    spec = SortSpec(algorithm=args.algorithm, exchange=args.exchange)
+    config = ServiceConfig(
+        max_batch=args.max_batch, max_delay_ms=args.max_delay_ms,
+        max_queue_depth=args.max_queue_depth,
+        max_in_flight=args.max_in_flight,
+        default_timeout_s=(None if args.timeout_ms is None
+                           else args.timeout_ms / 1e3))
+    with ServiceRunner(spec=spec, config=config) as runner:
+        server = make_server(runner, host=args.host, port=args.port,
+                             verbose=args.verbose)
+        host, port = server.server_address[:2]
+        print(f"sort service listening on http://{host}:{port} "
+              f"(algorithm={args.algorithm}, exchange={args.exchange}, "
+              f"max_batch={args.max_batch})")
+        try:
+            server.serve_forever()
+        except KeyboardInterrupt:
+            pass
+        finally:
+            server.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,183 @@
+"""Serving metrics registry (DESIGN.md Section 7.3).
+
+One thread-safe registry per `SortService` accumulates everything the
+operator of a sort-as-a-service deployment watches:
+
+  * per-bucket counters — requests, batches, batch occupancy, flush
+    reasons (size/deadline/drain), queue-wait, executable-cache hit/miss
+    deltas attributed to the bucket, and a bounded latency reservoir from
+    which p50/p99 are computed at snapshot time;
+  * global counters — admissions, typed rejections, expired/cancelled
+    requests, served results;
+  * a batch-time EWMA reusing `repro.runtime.ft.StepTimer`, so a slow
+    batch (cold compile, noisy neighbor) raises the same straggler signal
+    the train supervisor uses;
+  * the process-wide compiled-executable cache counters
+    (`repro.sort.driver.exec_cache.stats()`), pulled at snapshot time.
+
+`snapshot()` returns one JSON-safe nested dict (what `GET /metrics`
+serves); `reset()` zeroes the registry for before/after measurements —
+the load tests warm the caches, reset, then assert steady-state rates.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+
+from repro.runtime.ft import StepTimer
+
+
+def percentile(samples, q: float) -> float:
+    """Nearest-rank percentile of an unsorted sample list (q in [0, 1])."""
+    if not samples:
+        return 0.0
+    ordered = sorted(samples)
+    rank = min(len(ordered) - 1, max(0, int(q * len(ordered) + 0.5) - 1))
+    return ordered[rank]
+
+
+class _BucketMetrics:
+    """Counters for one batch bucket (one `repro.sort.bucket_key`)."""
+
+    def __init__(self, window: int):
+        self.requests = 0
+        self.batches = 0
+        self.occupancy_sum = 0
+        self.flush_reasons: dict = {}
+        self.queue_wait_s_sum = 0.0
+        self.queue_wait_s_max = 0.0
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.expired = 0
+        self.errors = 0
+        self.latency_s = deque(maxlen=window)
+
+    def as_dict(self) -> dict:
+        lat = list(self.latency_s)
+        batches = max(self.batches, 1)
+        cache_total = self.cache_hits + self.cache_misses
+        return {
+            "requests": self.requests,
+            "batches": self.batches,
+            "mean_occupancy": self.occupancy_sum / batches,
+            "flush_reasons": dict(self.flush_reasons),
+            "queue_wait_ms": {
+                "mean": 1e3 * self.queue_wait_s_sum / max(self.requests, 1),
+                "max": 1e3 * self.queue_wait_s_max,
+            },
+            "cache": {
+                "hits": self.cache_hits,
+                "misses": self.cache_misses,
+                "hit_rate": (self.cache_hits / cache_total
+                             if cache_total else 0.0),
+            },
+            "expired": self.expired,
+            "errors": self.errors,
+            "latency_ms": {
+                "p50": 1e3 * percentile(lat, 0.50),
+                "p99": 1e3 * percentile(lat, 0.99),
+                "mean": 1e3 * (sum(lat) / len(lat)) if lat else 0.0,
+                "samples": len(lat),
+            },
+        }
+
+
+class MetricsRegistry:
+    """Thread-safe serving metrics: observed from the asyncio loop thread
+    and the dispatch executor thread alike, snapshotted from anywhere."""
+
+    def __init__(self, *, window: int = 2048, straggler_threshold: float = 3.0,
+                 cache_stats=None):
+        self._lock = threading.Lock()
+        self._window = window
+        self._straggler_threshold = straggler_threshold
+        self._cache_stats = cache_stats   # callable -> dict, or None
+        self._reset_locked()
+
+    def _reset_locked(self):
+        self._buckets: dict = {}
+        self.admitted = 0
+        self.served = 0
+        self.rejected: dict = {}
+        self.expired = 0
+        self.cancelled = 0
+        self.errors = 0
+        self.batches = 0
+        self.batch_timer = StepTimer(threshold=self._straggler_threshold)
+
+    def _bucket(self, key) -> _BucketMetrics:
+        b = self._buckets.get(key)
+        if b is None:
+            b = self._buckets[key] = _BucketMetrics(self._window)
+        return b
+
+    # -- observations ------------------------------------------------------
+
+    def observe_admit(self, key) -> None:
+        with self._lock:
+            self.admitted += 1
+
+    def observe_reject(self, reason: str) -> None:
+        with self._lock:
+            self.rejected[reason] = self.rejected.get(reason, 0) + 1
+
+    def observe_expired(self, key) -> None:
+        with self._lock:
+            self.expired += 1
+            self._bucket(key).expired += 1
+
+    def observe_cancelled(self, key) -> None:
+        with self._lock:
+            self.cancelled += 1
+
+    def observe_batch(self, key, *, size: int, reason: str, queue_waits_s,
+                      compute_s: float, cache_delta=None) -> bool:
+        """Record one dispatched batch; returns the straggler flag."""
+        with self._lock:
+            self.batches += 1
+            b = self._bucket(key)
+            b.batches += 1
+            b.requests += size
+            b.occupancy_sum += size
+            b.flush_reasons[reason] = b.flush_reasons.get(reason, 0) + 1
+            for w in queue_waits_s:
+                b.queue_wait_s_sum += w
+                b.queue_wait_s_max = max(b.queue_wait_s_max, w)
+            if cache_delta:
+                b.cache_hits += cache_delta.get("hits", 0)
+                b.cache_misses += cache_delta.get("misses", 0)
+            return self.batch_timer.record(compute_s)
+
+    def observe_result(self, key, latency_s: float, *, ok: bool = True) -> None:
+        with self._lock:
+            b = self._bucket(key)
+            b.latency_s.append(latency_s)
+            if ok:
+                self.served += 1
+            else:
+                self.errors += 1
+                b.errors += 1
+
+    # -- readout -----------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            snap = {
+                "admitted": self.admitted,
+                "served": self.served,
+                "rejected": dict(self.rejected),
+                "expired": self.expired,
+                "cancelled": self.cancelled,
+                "errors": self.errors,
+                "batches": self.batches,
+                "batch_timer": self.batch_timer.snapshot(),
+                "buckets": {repr(k): b.as_dict()
+                            for k, b in self._buckets.items()},
+            }
+        if self._cache_stats is not None:
+            snap["exec_cache"] = self._cache_stats()
+        return snap
+
+    def reset(self) -> None:
+        with self._lock:
+            self._reset_locked()

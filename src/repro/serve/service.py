@@ -1,0 +1,372 @@
+"""SortService: `repro.sort` as an online, dynamically-batched service.
+
+The HSS engine underneath already made steady-state sorting cheap — the
+batched single-launch engine amortizes collectives across requests and
+the compiled-executable cache removes retracing (DESIGN.md Section 6).
+This module is the layer that lets *concurrent callers* reach that
+throughput: an asyncio front door that admits `sort`/`argsort`/`sort_kv`
+requests, buckets them by `repro.sort.bucket_key`, flushes each bucket on
+batch-size-or-deadline (repro.serve.batcher), dispatches one
+`sort_batched` launch per batch against the warm executable cache, and
+resolves per-request futures in input order.
+
+    svc = SortService(spec=SortSpec(exchange="allgather", tag=False))
+    async with svc:
+        sorted_np = await svc.submit(x)                  # one request
+        order = await svc.submit(x, kind="argsort")
+
+Robustness and observability ride along: admission control (a
+`max_queue_depth` outstanding-request cap and a `max_in_flight` batch
+semaphore, rejecting with the typed `Overloaded`), per-request deadlines
+(expired requests are dropped from their batch — they never poison the
+surviving ones), graceful drain on shutdown, and a `MetricsRegistry`
+(per-bucket occupancy/flush/latency/cache counters; `GET /metrics` in the
+HTTP front end serves its snapshot).
+
+Threaded callers (the stdlib HTTP front end, benchmarks) use
+`ServiceRunner`, which owns the event loop in a daemon thread and exposes
+a blocking `submit`.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.batcher import DynamicBatcher, Request
+from repro.serve.errors import DeadlineExceeded, Overloaded, ServiceClosed
+from repro.serve.metrics import MetricsRegistry
+from repro.sort import SortSpec, bucket_key, sort_batched
+from repro.sort import driver as sort_driver
+
+KINDS = ("sort", "argsort", "sort_kv")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Service knobs. Defaults favor throughput on a warm cache.
+
+    max_batch        bucket flush size (and the batched-launch B ceiling).
+    max_delay_ms     flush deadline: the latency bound a lone request pays.
+    max_queue_depth  admission cap on outstanding (unresolved) requests;
+                     beyond it `submit` raises Overloaded. A saturated
+                     in-flight limit backs up into this queue, so one cap
+                     bounds total memory whatever the bottleneck is.
+    max_in_flight    batches allowed past flush concurrently (semaphore);
+                     dispatch compute itself is serialized on one executor
+                     thread — one host, one mesh — so this bounds the
+                     flushed-but-unfinished pipeline, not device overlap.
+    pad_batches      pad each batch B up to the next power of two (cap
+                     max_batch) by repeating the last request's row, so a
+                     bucket needs O(log max_batch) compiled executables
+                     instead of one per occupancy; pad rows are discarded
+                     (per-request results are row-independent, so padding
+                     does not change the served bits).
+    default_timeout_s  per-request deadline when the caller passes none
+                     (None = no deadline).
+    latency_window   per-bucket latency reservoir size (p50/p99 basis).
+    straggler_threshold  batch-time EWMA multiplier that flags a straggler
+                     (repro.runtime.ft.StepTimer).
+    """
+    max_batch: int = 8
+    max_delay_ms: float = 5.0
+    max_queue_depth: int = 256
+    max_in_flight: int = 2
+    pad_batches: bool = True
+    default_timeout_s: float | None = None
+    latency_window: int = 2048
+    straggler_threshold: float = 3.0
+
+
+def _pad_pow2(b: int, cap: int) -> int:
+    p = 1
+    while p < b:
+        p *= 2
+    return min(p, cap)
+
+
+class SortService:
+    """Asyncio sort-as-a-service over the batched single-launch engine."""
+
+    def __init__(self, spec: SortSpec | None = None,
+                 config: ServiceConfig | None = None):
+        self.spec = spec if spec is not None else SortSpec()
+        self.config = config or ServiceConfig()
+        self.metrics = MetricsRegistry(
+            window=self.config.latency_window,
+            straggler_threshold=self.config.straggler_threshold,
+            cache_stats=sort_driver.exec_cache.stats)
+        self._batcher = DynamicBatcher(
+            max_batch=self.config.max_batch,
+            max_delay_s=self.config.max_delay_ms / 1e3,
+            flush_cb=self._on_flush)
+        # one dispatch thread: jax dispatch against one host mesh is
+        # serial anyway, and a single worker makes the per-batch
+        # exec-cache delta attribution exact
+        self._executor = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="sort-serve-dispatch")
+        self._sem: asyncio.Semaphore | None = None
+        self._loop: asyncio.AbstractEventLoop | None = None
+        self._queued = 0        # admitted, not yet handed to the executor
+        self._outstanding = 0   # admitted, future not yet resolved
+        self._in_flight = 0     # batches past the semaphore
+        self._idle: asyncio.Event | None = None
+        self._closed = False
+
+    # -- submission --------------------------------------------------------
+
+    def enqueue(self, x, *, kind: str = "sort", values=None,
+                spec: SortSpec | None = None,
+                timeout: float | None = None) -> asyncio.Future:
+        """Admit one request; returns its asyncio future. Must be called
+        on the service's event loop. Raises ServiceClosed / Overloaded
+        synchronously when admission fails (nothing is queued)."""
+        loop = asyncio.get_running_loop()
+        if self._loop is None:
+            self._loop = loop
+            self._sem = asyncio.Semaphore(self.config.max_in_flight)
+            self._idle = asyncio.Event()
+            self._idle.set()
+        elif loop is not self._loop:
+            raise RuntimeError("SortService is bound to another event loop")
+        if self._closed:
+            self.metrics.observe_reject("closed")
+            raise ServiceClosed("service is closed to new requests")
+        if self._queued >= self.config.max_queue_depth:
+            self.metrics.observe_reject("queue_full")
+            raise Overloaded("queue_full", queued=self._queued,
+                             in_flight=self._in_flight)
+        if kind not in KINDS:
+            raise ValueError(f"kind must be one of {KINDS}, got {kind!r}")
+        x = np.asarray(x)
+        if x.ndim != 1 or x.size == 0:
+            raise ValueError(
+                f"requests must be non-empty 1-D key arrays, got {x.shape}")
+        spec = spec if spec is not None else self.spec
+        if kind in ("argsort", "sort_kv"):
+            # same normalization the front-door applies: exact permutations
+            # need tagging (tag=False is the front door's ValueError too),
+            # and the bucket key must reflect the normalized spec
+            if spec.tag is False:
+                raise ValueError(
+                    f"{kind} requires tagging (spec sets tag=False)")
+            spec = dataclasses.replace(spec, stable=True, tag=True)
+        if kind == "sort_kv":
+            values = np.asarray(values)
+            if values.shape[:1] != x.shape:
+                raise ValueError(
+                    f"values leading dim {values.shape[:1]} != {x.shape}")
+        timeout = (timeout if timeout is not None
+                   else self.config.default_timeout_s)
+        req = Request(
+            kind=kind, x=x, values=values, spec=spec,
+            key=bucket_key(x.shape[0], x.dtype, spec, kind=kind),
+            future=loop.create_future(), t_submit=loop.time(),
+            deadline=None if timeout is None else loop.time() + timeout)
+        self._queued += 1
+        self._outstanding += 1
+        self._idle.clear()
+        self.metrics.observe_admit(req.key)
+        self._batcher.add(req)
+        return req.future
+
+    async def submit(self, x, *, kind: str = "sort", values=None,
+                     spec: SortSpec | None = None,
+                     timeout: float | None = None):
+        """Admit one request and await its result: the sorted keys
+        (`kind="sort"`), the stable argsort permutation ("argsort"), or a
+        `(sorted_keys, permuted_values)` pair ("sort_kv") — each a NumPy
+        array, bit-identical to the corresponding direct `repro.sort`
+        call with the same spec/seed."""
+        return await self.enqueue(x, kind=kind, values=values, spec=spec,
+                                  timeout=timeout)
+
+    # -- batch lifecycle ---------------------------------------------------
+
+    def _on_flush(self, key, reqs, reason):
+        self._loop.create_task(self._dispatch(key, reqs, reason))
+
+    def _resolve(self, req: Request, result) -> None:
+        fut = req.future
+        if fut.cancelled():
+            self.metrics.observe_cancelled(req.key)
+        elif isinstance(result, BaseException):
+            fut.set_exception(result)
+        else:
+            fut.set_result(result)
+        self._outstanding -= 1
+        if self._outstanding == 0:
+            self._idle.set()
+
+    async def _dispatch(self, key, reqs, reason):
+        async with self._sem:
+            self._queued -= len(reqs)
+            now = self._loop.time()
+            live = []
+            for r in reqs:
+                if r.future.cancelled():
+                    self._resolve(r, None)   # just bookkeeping
+                elif r.deadline is not None and now > r.deadline:
+                    self.metrics.observe_expired(r.key)
+                    self._resolve(r, DeadlineExceeded(
+                        f"deadline passed after "
+                        f"{now - r.t_submit:.3f}s in queue"))
+                else:
+                    live.append(r)
+            if not live:
+                return
+            self._in_flight += 1
+            queue_waits = [now - r.t_submit for r in live]
+            t0 = time.monotonic()
+            try:
+                results, cache_delta = await self._loop.run_in_executor(
+                    self._executor, self._run_batch, live)
+            except Exception as e:   # whole-batch failure (bad spec, OOM)
+                results, cache_delta = [e] * len(live), None
+            finally:
+                self._in_flight -= 1
+            self.metrics.observe_batch(
+                key, size=len(live), reason=reason,
+                queue_waits_s=queue_waits, compute_s=time.monotonic() - t0,
+                cache_delta=cache_delta)
+            done = self._loop.time()
+            for r, res in zip(live, results):
+                self.metrics.observe_result(
+                    r.key, done - r.t_submit,
+                    ok=not isinstance(res, BaseException))
+                self._resolve(r, res)
+
+    def _run_batch(self, reqs):
+        """Executor thread: one `sort_batched` launch for the batch.
+
+        All requests share a bucket key, hence an (n,), dtype, kind, and
+        spec — stacking is safe. Returns per-request results in input
+        order (exceptions as values: an overflow on one argsort request
+        fails that request, not its batchmates)."""
+        spec, kind = reqs[0].spec, reqs[0].kind
+        b_real = len(reqs)
+        xs = np.stack([r.x for r in reqs])
+        if self.config.pad_batches:
+            b_pad = _pad_pow2(b_real, self.config.max_batch)
+            if b_pad > b_real:   # repeat the last row; rows are independent
+                xs = np.concatenate(
+                    [xs, np.broadcast_to(xs[-1], (b_pad - b_real,) + xs[-1].shape)])
+        stats0 = sort_driver.exec_cache.stats()
+        out = sort_batched(jnp.asarray(xs), spec)
+        results = []
+        for b in range(b_real):
+            r = out.request(b)
+            if kind == "sort":
+                results.append(r.gather())
+                continue
+            if int(np.asarray(r.overflow)) != 0:
+                results.append(RuntimeError(
+                    f"{kind}: exchange dropped keys (overflow="
+                    f"{int(np.asarray(r.overflow))}); raise pair_factor/"
+                    "out_slack or use exchange='allgather'"))
+            elif kind == "argsort":
+                results.append(r.gather_indices())
+            else:   # sort_kv
+                order = r.gather_indices()
+                results.append((r.gather(), reqs[b].values[order]))
+        stats1 = sort_driver.exec_cache.stats()
+        delta = {k: stats1[k] - stats0[k]
+                 for k in ("hits", "misses", "evictions")}
+        return results, delta
+
+    # -- lifecycle ---------------------------------------------------------
+
+    @property
+    def queued(self) -> int:
+        return self._queued
+
+    @property
+    def in_flight(self) -> int:
+        return self._in_flight
+
+    async def drain(self) -> None:
+        """Flush every bucket now and wait for all outstanding requests
+        (including in-flight batches) to resolve."""
+        if self._idle is None:   # never used
+            return
+        self._batcher.flush_all("drain")
+        await self._idle.wait()
+
+    async def aclose(self) -> None:
+        """Graceful shutdown: stop admitting, drain, release the
+        dispatcher. Idempotent."""
+        self._closed = True
+        await self.drain()
+        self._executor.shutdown(wait=True)
+
+    async def __aenter__(self):
+        return self
+
+    async def __aexit__(self, *exc):
+        await self.aclose()
+        return False
+
+
+class ServiceRunner:
+    """A SortService on its own event-loop thread, with a blocking API.
+
+    The stdlib HTTP front end (repro.serve.http) handles each connection
+    on a thread; benchmarks and the CI smoke drive load from thread
+    pools. Both need a thread-safe, blocking `submit` — this wrapper owns
+    the asyncio loop in a daemon thread and bridges with
+    `run_coroutine_threadsafe`.
+    """
+
+    def __init__(self, spec: SortSpec | None = None,
+                 config: ServiceConfig | None = None):
+        self._loop = asyncio.new_event_loop()
+        started = threading.Event()
+
+        def _run():
+            asyncio.set_event_loop(self._loop)
+            self._loop.call_soon(started.set)
+            self._loop.run_forever()
+
+        self._thread = threading.Thread(
+            target=_run, name="sort-serve-loop", daemon=True)
+        self._thread.start()
+        started.wait()
+        self.service = SortService(spec=spec, config=config)
+
+    def submit(self, x, *, kind: str = "sort", values=None,
+               spec: SortSpec | None = None, timeout: float | None = None):
+        """Blocking submit from any thread; raises the service's typed
+        errors (Overloaded / DeadlineExceeded / ServiceClosed)."""
+        fut = asyncio.run_coroutine_threadsafe(
+            self.service.submit(x, kind=kind, values=values, spec=spec,
+                                timeout=timeout), self._loop)
+        return fut.result()
+
+    def metrics(self) -> dict:
+        return self.service.metrics.snapshot()
+
+    def reset_metrics(self) -> None:
+        self.service.metrics.reset()
+
+    def drain(self) -> None:
+        asyncio.run_coroutine_threadsafe(
+            self.service.drain(), self._loop).result()
+
+    def close(self) -> None:
+        asyncio.run_coroutine_threadsafe(
+            self.service.aclose(), self._loop).result()
+        self._loop.call_soon_threadsafe(self._loop.stop)
+        self._thread.join(timeout=10)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

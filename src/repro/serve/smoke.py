@@ -1,0 +1,133 @@
+"""End-to-end serving smoke: the CI gate for the sort service.
+
+    PYTHONPATH=src python -m repro.serve.smoke
+
+Starts the HTTP front end in-process (8 simulated host devices), warms
+every (bucket, padded-batch-size) executable, resets the metrics, then
+fires 64 concurrent mixed-shape requests and asserts:
+
+  * every response is exactly the NumPy sort of its input (bit-identity
+    through the whole batch/HTTP path);
+  * the executable-cache hit rate over the measured window is > 0.9
+    (the steady-state serving contract, ISSUE 6 acceptance);
+  * admission control rejects cleanly (HTTP 429) past the queue limit.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import threading
+import urllib.error
+import urllib.request
+from concurrent.futures import ThreadPoolExecutor
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+
+SHAPES = (8 * 32, 8 * 48)
+LOAD = 64
+
+
+def _post(base: str, route: str, payload: dict):
+    req = urllib.request.Request(
+        base + route, data=json.dumps(payload).encode(),
+        headers={"Content-Type": "application/json"}, method="POST")
+    try:
+        with urllib.request.urlopen(req, timeout=60) as resp:
+            return resp.status, json.loads(resp.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read() or b"{}")
+
+
+def _warm_executables(spec, rng, *, max_batch: int) -> None:
+    """Compile every (shape, padded-batch-size) executable the service can
+    dispatch: the service pads batches to powers of two <= max_batch, so
+    this is the complete warm set — deterministic, no flush-timing races."""
+    import jax.numpy as jnp
+
+    from repro.sort import sort_batched
+    for n in SHAPES:
+        b = 1
+        while b <= max_batch:
+            xs = np.stack([rng.permutation(4 * n)[:n].astype(np.int32)
+                           for _ in range(b)])
+            sort_batched(jnp.asarray(xs), spec)
+            b *= 2
+
+
+def main() -> int:
+    from repro.serve.http import make_server
+    from repro.serve.service import ServiceConfig, ServiceRunner
+    from repro.sort import SortSpec
+
+    spec = SortSpec(exchange="allgather", tag=False)   # distinct int keys
+    config = ServiceConfig(max_batch=4, max_delay_ms=10.0,
+                           max_queue_depth=256, max_in_flight=2)
+    rng = np.random.default_rng(0)
+    _warm_executables(spec, rng, max_batch=config.max_batch)
+
+    with ServiceRunner(spec=spec, config=config) as runner:
+        server = make_server(runner, port=0)
+        host, port = server.server_address[:2]
+        base = f"http://{host}:{port}"
+        threading.Thread(target=server.serve_forever, daemon=True).start()
+        try:
+            runner.reset_metrics()
+
+            # -- measured window: concurrent mixed-shape load over HTTP
+            inputs = [rng.permutation(4 * SHAPES[i % len(SHAPES)])
+                      [:SHAPES[i % len(SHAPES)]].astype(np.int32)
+                      for i in range(LOAD)]
+
+            def one(x):
+                status, body = _post(base, "/v1/sort",
+                                     {"keys": x.tolist(), "dtype": "int32"})
+                assert status == 200, body
+                return np.asarray(body["sorted"], np.int32)
+
+            with ThreadPoolExecutor(16) as pool:
+                results = list(pool.map(one, inputs))
+            for x, got in zip(inputs, results):
+                np.testing.assert_array_equal(got, np.sort(x))
+
+            metrics = json.loads(urllib.request.urlopen(
+                base + "/metrics", timeout=30).read())
+            hits = sum(b["cache"]["hits"] for b in metrics["buckets"].values())
+            misses = sum(b["cache"]["misses"]
+                         for b in metrics["buckets"].values())
+            hit_rate = hits / max(hits + misses, 1)
+            print(f"served={metrics['served']} batches={metrics['batches']} "
+                  f"cache_hits={hits} cache_misses={misses} "
+                  f"hit_rate={hit_rate:.3f}")
+            assert metrics["served"] == LOAD, metrics
+            assert hits > 0, "no executable-cache hits under load"
+            assert hit_rate > 0.9, f"warm hit rate {hit_rate:.3f} <= 0.9"
+        finally:
+            server.shutdown()
+
+    # -- admission: a concurrent burst past max_queue_depth must bounce 429
+    tiny = ServiceConfig(max_batch=64, max_delay_ms=500.0, max_queue_depth=4)
+    with ServiceRunner(spec=spec, config=tiny) as small:
+        srv2 = make_server(small, port=0)
+        threading.Thread(target=srv2.serve_forever, daemon=True).start()
+        base2 = f"http://{srv2.server_address[0]}:{srv2.server_address[1]}"
+        x = rng.permutation(4 * SHAPES[0])[:SHAPES[0]].astype(np.int32)
+        try:
+            with ThreadPoolExecutor(8) as pool:
+                codes = [c for c, _ in pool.map(
+                    lambda _: _post(base2, "/v1/sort",
+                                    {"keys": x.tolist(), "dtype": "int32"}),
+                    range(8))]
+            assert 429 in codes, f"no 429 under overload: {codes}"
+            assert 200 in codes, f"admitted requests must still serve: {codes}"
+            print(f"overload burst codes: {sorted(codes)}")
+        finally:
+            srv2.shutdown()
+    print("serve smoke: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

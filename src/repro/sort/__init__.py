@@ -25,7 +25,9 @@ The legacy per-algorithm entry points (`repro.core.hss_sort` et al.) remain
 as thin shims over the same driver.
 """
 from repro.sort.adapters import BatchedSortOutput, SortOutput
-from repro.sort.api import argsort, gather, sort, sort_batched, sort_kv
+from repro.sort.api import (
+    argsort, bucket_key, gather, sort, sort_batched, sort_kv,
+    spec_fingerprint)
 from repro.sort.driver import exec_cache
 from repro.sort.partitioners import (
     Partitioner, ShardCtx, available_algorithms, get_partitioner,
@@ -35,6 +37,7 @@ from repro.sort.spec import ALGORITHMS, SortSpec
 __all__ = [
     "ALGORITHMS", "BatchedSortOutput", "Partitioner", "ShardCtx",
     "SortOutput", "SortSpec", "argsort", "available_algorithms",
-    "exec_cache", "gather", "get_partitioner", "register_partitioner",
-    "sort", "sort_batched", "sort_kv",
+    "bucket_key", "exec_cache", "gather", "get_partitioner",
+    "register_partitioner", "sort", "sort_batched", "sort_kv",
+    "spec_fingerprint",
 ]

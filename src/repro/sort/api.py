@@ -43,6 +43,53 @@ def _mesh_axes(spec: SortSpec, part):
     return p, tuple(a for a, _ in axes), tuple(s for _, s in axes)
 
 
+def _mesh_fingerprint(spec: SortSpec):
+    """Structural mesh identity: a fresh-but-equal Mesh still hits."""
+    if spec.mesh is None:
+        return ("auto", len(jax.devices()), jax.default_backend())
+    return (tuple((a, int(s)) for a, s in spec.mesh.shape.items()),
+            tuple(int(d.id) for d in spec.mesh.devices.flat))
+
+
+def _spec_trace_fields(spec: SortSpec) -> tuple:
+    """The SortSpec fields that shape the traced program (everything else
+    is either a runtime argument, like the seed, or captured through the
+    encoded array's shape/dtype)."""
+    return (spec.algorithm, spec.eps, spec.rounds, spec.sample_per_shard,
+            spec.adaptive, spec.total_sample, spec.s, spec.exchange,
+            spec.pair_factor, spec.out_slack, spec.kernel_policy)
+
+
+def spec_fingerprint(spec: SortSpec):
+    """Hashable fingerprint of every SortSpec field that determines a
+    request's served bits: the trace-shaping fields plus the semantic ones
+    (stable/tag change the adapter plan, the seed changes the sampled
+    splitters) and the structural mesh identity. Returns None when the
+    spec carries opaque state no fingerprint can capture (a caller
+    `local_sort_fn` or warm-start probes) — such specs must not share a
+    cached executable or a serving batch with anything else."""
+    if spec.local_sort_fn is not None or spec.initial_probes is not None:
+        return None
+    return _spec_trace_fields(spec) + (
+        spec.stable, spec.tag, spec.seed, _mesh_fingerprint(spec))
+
+
+def bucket_key(n, dtype, spec: SortSpec, *, kind: str = "sort"):
+    """Serving-batch grouping key (repro.serve): requests that share it
+    can stack into one `sort_batched` launch — same length, key dtype,
+    request kind, and full spec fingerprint — and therefore share one
+    compiled-executable cache entry per batch size. This is the public
+    face of `_cache_key`'s derivation: the exec-cache key proper also
+    hashes the *encoded* array shape/dtype, which is only known once a
+    batch's adapter plan is built, so the batcher groups on everything
+    known pre-encoding. Opaque specs (local_sort_fn / initial_probes)
+    bucket by object identity: they never share a batch."""
+    fp = spec_fingerprint(spec)
+    if fp is None:
+        fp = ("opaque", id(spec))
+    return (kind, int(n), str(jnp.dtype(dtype)), fp)
+
+
 def _cache_key(spec: SortSpec, names, sizes, enc, *, batched: bool):
     """Compiled-executable cache key: (shape bucket, dtype, SortSpec
     fingerprint, mesh fingerprint). None (uncached) when the spec carries
@@ -50,16 +97,9 @@ def _cache_key(spec: SortSpec, names, sizes, enc, *, batched: bool):
     warm-start probes would be baked into a reused trace."""
     if spec.local_sort_fn is not None or spec.initial_probes is not None:
         return None
-    if spec.mesh is None:
-        mesh_fp = ("auto", len(jax.devices()), jax.default_backend())
-    else:
-        mesh_fp = (tuple((a, int(s)) for a, s in spec.mesh.shape.items()),
-                   tuple(int(d.id) for d in spec.mesh.devices.flat))
-    return ("batched" if batched else "single", spec.algorithm, spec.eps,
-            spec.rounds, spec.sample_per_shard, spec.adaptive,
-            spec.total_sample, spec.s, spec.exchange, spec.pair_factor,
-            spec.out_slack, spec.kernel_policy, names, sizes, mesh_fp,
-            tuple(enc.shape), str(enc.dtype))
+    return (("batched" if batched else "single",) + _spec_trace_fields(spec)
+            + (names, sizes, _mesh_fingerprint(spec),
+               tuple(enc.shape), str(enc.dtype)))
 
 
 def _sort_impl(x, spec: SortSpec, want_indices: bool) -> SortOutput:

@@ -30,6 +30,8 @@ take a `cache_key` that opts into the compiled-executable cache
 """
 from __future__ import annotations
 
+import threading
+from collections import OrderedDict
 from typing import NamedTuple
 
 import jax
@@ -70,31 +72,65 @@ class ExecutableCache:
     sort_fn bakes into the program. Callers with unhashable/opaque state
     (custom local_sort_fn, warm-start probes) pass cache_key=None and keep
     today's per-call behavior.
+
+    Eviction is LRU with a capacity cap (`max_entries`): a hit refreshes
+    the entry, an insert past capacity evicts the least-recently-used
+    executable and bumps `evictions`. The counters are exposed through
+    `stats()` — the serving metrics registry (repro.serve.metrics)
+    snapshots them, and the dynamic batcher attributes per-batch deltas to
+    its shape buckets. All bookkeeping is lock-protected: the serving
+    dispatch thread and the main thread share the global instance.
     """
 
     def __init__(self, max_entries: int = 64):
         self.max_entries = max_entries
-        self._fns = {}
+        self._fns: OrderedDict = OrderedDict()
+        self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
         self.traces = 0     # trace-time executions of driver shard bodies
 
     def get_or_build(self, key, build):
         if key is None:
             return build()
-        fn = self._fns.get(key)
-        if fn is None:
+        with self._lock:
+            fn = self._fns.get(key)
+            if fn is not None:
+                self.hits += 1
+                self._fns.move_to_end(key)
+                return fn
             self.misses += 1
-            if len(self._fns) >= self.max_entries:  # FIFO eviction
-                self._fns.pop(next(iter(self._fns)))
-            fn = self._fns[key] = build()
-        else:
-            self.hits += 1
+        fn = build()   # outside the lock: builds may nest cache lookups
+        with self._lock:
+            cur = self._fns.get(key)
+            if cur is not None:     # racer built it first: keep theirs
+                return cur
+            self._fns[key] = fn
+            while len(self._fns) > self.max_entries:
+                self._fns.popitem(last=False)
+                self.evictions += 1
         return fn
 
+    def contains(self, key) -> bool:
+        """Whether `key` holds a warm executable (no LRU refresh)."""
+        with self._lock:
+            return key in self._fns
+
+    def stats(self) -> dict:
+        """Counter snapshot for metrics consumers (plain dict, safe to
+        diff: the serving layer attributes per-batch deltas to buckets)."""
+        with self._lock:
+            total = self.hits + self.misses
+            return {"size": len(self._fns), "max_entries": self.max_entries,
+                    "hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions, "traces": self.traces,
+                    "hit_rate": self.hits / total if total else 0.0}
+
     def clear(self):
-        self._fns.clear()
-        self.hits = self.misses = self.traces = 0
+        with self._lock:
+            self._fns.clear()
+            self.hits = self.misses = self.evictions = self.traces = 0
 
     def __len__(self):
         return len(self._fns)

@@ -1,0 +1,82 @@
+"""group_by_length edge cases (ISSUE 6 satellite): the bucketing policy the
+batched engine and the serving batcher stack requests on."""
+import numpy as np
+import pytest
+
+from repro.sort.grouping import group_by_length
+
+
+def _seqs(lengths):
+    return [np.zeros(n, np.int32) for n in lengths]
+
+
+def test_empty_request_list():
+    assert group_by_length([]) == {}
+    assert group_by_length([], max_groups=4) == {}
+
+
+def test_default_exact_lengths_first_seen_order():
+    # the historical contract sort_batched stacks on: exact lengths, keys
+    # in first-seen order, indices in submission order
+    groups = group_by_length(_seqs([48, 32, 48, 32, 64]))
+    assert list(groups) == [48, 32, 64]
+    assert groups == {48: [0, 2], 32: [1, 3], 64: [4]}
+
+
+def test_all_equal_lengths_single_group():
+    groups = group_by_length(_seqs([32] * 5))
+    assert groups == {32: [0, 1, 2, 3, 4]}
+    # whatever max_groups says, an equal-length run is never split
+    assert group_by_length(_seqs([32] * 5), max_groups=3) == \
+        {32: [0, 1, 2, 3, 4]}
+
+
+def test_max_groups_exceeding_unique_lengths():
+    groups = group_by_length(_seqs([32, 48, 64]), max_groups=10)
+    assert groups == {32: [0], 48: [1], 64: [2]}
+
+
+def test_max_groups_coalesces_adjacent_lengths():
+    # 4 distinct lengths -> 2 groups; runs are contiguous in length,
+    # keyed by the run max, indices ascending
+    groups = group_by_length(_seqs([10, 20, 30, 40, 10, 20]), max_groups=2)
+    assert list(groups) == sorted(groups)
+    assert set(groups) <= {10, 20, 30, 40}
+    flat = [i for idx in groups.values() for i in idx]
+    assert sorted(flat) == list(range(6))
+    # balanced greedily without splitting an equal-length run: the first
+    # group takes {10, 20} (4 requests), the second {30, 40} (2)
+    assert groups == {20: [0, 1, 4, 5], 40: [2, 3]}
+
+
+def test_max_groups_leaves_one_length_per_slot():
+    # a heavy head must not swallow lengths the remaining slots need
+    groups = group_by_length(_seqs([10] * 8 + [20, 30]), max_groups=3)
+    assert list(groups) == [10, 20, 30]
+    assert [len(v) for v in groups.values()] == [8, 1, 1]
+
+
+def test_multiple_quantizes_lengths_up():
+    groups = group_by_length(_seqs([30, 32, 33, 60]), multiple=32)
+    assert groups == {32: [0, 1], 64: [2, 3]}
+    # quantized keys come back ascending
+    assert list(groups) == sorted(groups)
+
+
+def test_multiple_composes_with_max_groups():
+    groups = group_by_length(_seqs([30, 33, 65, 100]), multiple=32,
+                             max_groups=2)
+    flat = sorted(i for idx in groups.values() for i in idx)
+    assert flat == [0, 1, 2, 3]
+    assert [len(v) for v in groups.values()] == [2, 2]
+    assert list(groups) == [64, 128]   # run-max keys: {32,64} and {96,128}
+
+
+def test_multiple_below_one_rejected():
+    with pytest.raises(ValueError, match="multiple"):
+        group_by_length(_seqs([8]), multiple=0)
+
+
+def test_plain_lists_accepted():
+    # sequences without .shape fall back to len()
+    assert group_by_length([[1, 2], [3], [4, 5]]) == {2: [0, 2], 1: [1]}

@@ -1,0 +1,313 @@
+"""Serving layer (repro.serve): dynamic batcher, admission, metrics, HTTP.
+
+The async service's contract is bit-identity with the direct front door:
+every served result must equal the corresponding `sort()`/`argsort()`/
+`sort_kv()` call with the same spec. Batching, padding, deadlines, and
+admission are pure scheduling — they must never change the served bits.
+
+No pytest-asyncio in the image: async tests run under `asyncio.run`.
+"""
+import asyncio
+import json
+import threading
+import urllib.error
+import urllib.request
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.serve import (DeadlineExceeded, Overloaded, ServiceClosed,
+                         ServiceConfig, ServiceRunner, SortService)
+from repro.serve.metrics import MetricsRegistry, percentile
+from repro.sort import SortSpec, argsort, sort, sort_batched, sort_kv
+from repro.sort.driver import ExecutableCache
+
+SPEC = SortSpec(exchange="allgather", tag=False)   # distinct int keys
+N1, N2 = 8 * 32, 8 * 48
+CONFIG = ServiceConfig(max_batch=4, max_delay_ms=20.0)
+
+
+def _keys(rng, n):
+    return rng.permutation(4 * n)[:n].astype(np.int32)
+
+
+@pytest.fixture(scope="module")
+def warm():
+    """Compile every (shape, padded-B) executable the module's services can
+    dispatch, once — steady-state tests then only ever hit the cache."""
+    rng = np.random.default_rng(7)
+    for n in (N1, N2):
+        b = 1
+        while b <= CONFIG.max_batch:
+            xs = np.stack([_keys(rng, n) for _ in range(b)])
+            sort_batched(jnp.asarray(xs), SPEC)
+            b *= 2
+
+
+# -- ExecutableCache (satellite 1) ----------------------------------------
+
+
+def test_exec_cache_lru_eviction_and_stats():
+    built = []
+    cache = ExecutableCache(max_entries=2)
+    for k in ("a", "b", "a", "c"):     # c evicts b (a was refreshed)
+        cache.get_or_build(k, lambda k=k: built.append(k) or k)
+    assert built == ["a", "b", "c"]
+    assert cache.contains("a") and cache.contains("c")
+    assert not cache.contains("b")
+    s = cache.stats()
+    assert (s["hits"], s["misses"], s["evictions"]) == (1, 3, 1)
+    assert s["size"] == 2 and s["max_entries"] == 2
+    assert s["hit_rate"] == pytest.approx(0.25)
+    # rebuilding an evicted key is a fresh miss, not an error
+    cache.get_or_build("b", lambda: "b2")
+    assert cache.stats()["misses"] == 4
+
+
+def test_exec_cache_none_key_bypasses_counters():
+    cache = ExecutableCache()
+    assert cache.get_or_build(None, lambda: 42) == 42
+    s = cache.stats()
+    assert s["hits"] == s["misses"] == s["size"] == 0
+
+
+def test_exec_cache_clear_zeroes_everything():
+    cache = ExecutableCache(max_entries=1)
+    cache.get_or_build("a", lambda: 1)
+    cache.get_or_build("b", lambda: 2)   # evicts a
+    cache.clear()
+    s = cache.stats()
+    assert (s["size"], s["hits"], s["misses"], s["evictions"]) == (0, 0, 0, 0)
+
+
+# -- MetricsRegistry -------------------------------------------------------
+
+
+def test_percentile_nearest_rank():
+    samples = list(range(1, 101))
+    assert percentile(samples, 0.50) == 50
+    assert percentile(samples, 0.99) == 99
+    assert percentile([], 0.5) == 0.0
+    assert percentile([7.0], 0.99) == 7.0
+
+
+def test_metrics_registry_flow_snapshot_reset():
+    reg = MetricsRegistry(window=8, cache_stats=lambda: {"hits": 5})
+    key = ("sort", 256, "int32")
+    reg.observe_admit(key)
+    reg.observe_admit(key)
+    reg.observe_reject("queue_full")
+    reg.observe_batch(key, size=2, reason="size", queue_waits_s=[0.001, 0.002],
+                      compute_s=0.01, cache_delta={"hits": 1, "misses": 1})
+    reg.observe_result(key, 0.011)
+    reg.observe_result(key, 0.013, ok=False)
+    snap = reg.snapshot()
+    assert snap["admitted"] == 2 and snap["served"] == 1
+    assert snap["rejected"] == {"queue_full": 1}
+    assert snap["errors"] == 1 and snap["batches"] == 1
+    assert snap["exec_cache"] == {"hits": 5}
+    b = snap["buckets"][repr(key)]
+    assert b["requests"] == 2 and b["flush_reasons"] == {"size": 1}
+    assert b["cache"] == {"hits": 1, "misses": 1, "hit_rate": 0.5}
+    assert b["latency_ms"]["samples"] == 2
+    assert json.dumps(snap)   # JSON-safe end to end
+    reg.reset()
+    snap2 = reg.snapshot()
+    assert snap2["admitted"] == 0 and snap2["buckets"] == {}
+
+
+# -- flush policy ----------------------------------------------------------
+
+
+def _flush_reasons(svc):
+    return {reason: n
+            for b in svc.metrics.snapshot()["buckets"].values()
+            for reason, n in b["flush_reasons"].items()}
+
+
+def test_flush_on_size_vs_deadline(rng, warm):
+    async def run():
+        async with SortService(spec=SPEC, config=CONFIG) as svc:
+            # a full bucket flushes immediately on size...
+            full = [svc.enqueue(_keys(rng, N1))
+                    for _ in range(CONFIG.max_batch)]
+            await asyncio.gather(*full)
+            reasons = _flush_reasons(svc)
+            assert reasons.get("size") == 1 and "deadline" not in reasons
+            # ...a lone request waits out max_delay and flushes on deadline
+            await svc.submit(_keys(rng, N1))
+            assert _flush_reasons(svc).get("deadline") == 1
+    asyncio.run(run())
+
+
+def test_future_ordering_interleaved_buckets(rng, warm):
+    """Mixed-shape submissions batch per bucket, but each future gets its
+    own request's result — in input order, bit-identical to np.sort."""
+    async def run():
+        async with SortService(spec=SPEC, config=CONFIG) as svc:
+            inputs = [_keys(rng, N1 if i % 2 == 0 else N2) for i in range(8)]
+            outs = await asyncio.gather(*[svc.enqueue(x) for x in inputs])
+            for x, got in zip(inputs, outs):
+                np.testing.assert_array_equal(got, np.sort(x))
+            occupancies = [b["mean_occupancy"]
+                           for b in svc.metrics.snapshot()["buckets"].values()]
+            assert all(o == 4.0 for o in occupancies)   # 2 buckets x B=4
+    asyncio.run(run())
+
+
+# -- bit-identity with the direct front door (acceptance) ------------------
+
+
+def test_served_results_bit_identical_to_direct_calls(rng, warm):
+    x = _keys(rng, N1)
+    values = rng.standard_normal((N1, 3)).astype(np.float32)
+    # argsort/sort_kv need tagging, which SPEC's tag=False forbids — use
+    # the auto-tag spec for them (exactly what a direct caller must do)
+    aspec = SortSpec(exchange="allgather")
+
+    async def run():
+        async with SortService(spec=SPEC, config=CONFIG) as svc:
+            return (await svc.submit(x),
+                    await svc.submit(x, kind="argsort", spec=aspec),
+                    await svc.submit(x, kind="sort_kv", values=values,
+                                     spec=aspec))
+    srv_sort, srv_order, (srv_k, srv_v) = asyncio.run(run())
+
+    np.testing.assert_array_equal(srv_sort, sort(jnp.asarray(x), SPEC).gather())
+    np.testing.assert_array_equal(srv_order, argsort(jnp.asarray(x), aspec))
+    ref_k, ref_v = sort_kv(jnp.asarray(x), values, aspec)
+    np.testing.assert_array_equal(srv_k, ref_k)
+    np.testing.assert_array_equal(srv_v, ref_v)
+
+
+# -- admission control & deadlines -----------------------------------------
+
+
+def test_admission_rejects_past_queue_depth(rng, warm):
+    cfg = ServiceConfig(max_batch=64, max_delay_ms=1000.0, max_queue_depth=3)
+
+    async def run():
+        async with SortService(spec=SPEC, config=cfg) as svc:
+            x = _keys(rng, N1)
+            futs = [svc.enqueue(x) for _ in range(3)]
+            with pytest.raises(Overloaded) as exc:
+                svc.enqueue(x)
+            assert exc.value.queued == 3
+            await svc.drain()                 # flush the held bucket
+            for f in futs:
+                np.testing.assert_array_equal(await f, np.sort(x))
+            assert svc.metrics.snapshot()["rejected"] == {"queue_full": 1}
+            assert _flush_reasons(svc) == {"drain": 1}
+    asyncio.run(run())
+
+
+def test_expired_deadline_does_not_poison_batch(rng, warm):
+    async def run():
+        async with SortService(spec=SPEC, config=CONFIG) as svc:
+            x_dead = _keys(rng, N1)
+            x_live = [_keys(rng, N1) for _ in range(3)]
+            dead = svc.enqueue(x_dead, timeout=0.0)   # expired at dispatch
+            live = [svc.enqueue(x) for x in x_live]
+            with pytest.raises(DeadlineExceeded):
+                await dead
+            for x, f in zip(x_live, live):
+                np.testing.assert_array_equal(await f, np.sort(x))
+            snap = svc.metrics.snapshot()
+            assert snap["expired"] == 1 and snap["served"] == 3
+    asyncio.run(run())
+
+
+def test_service_closed_after_aclose(rng, warm):
+    async def run():
+        svc = SortService(spec=SPEC, config=CONFIG)
+        x = _keys(rng, N1)
+        np.testing.assert_array_equal(   # bind the loop with one real request
+            await svc.submit(x), np.sort(x))
+        await svc.aclose()
+        with pytest.raises(ServiceClosed):
+            svc.enqueue(x)
+        assert svc.metrics.snapshot()["rejected"] == {"closed": 1}
+    asyncio.run(run())
+
+
+def test_enqueue_validates_inputs(rng, warm):
+    async def run():
+        async with SortService(spec=SPEC, config=CONFIG) as svc:
+            with pytest.raises(ValueError, match="kind"):
+                svc.enqueue(_keys(rng, N1), kind="median")
+            with pytest.raises(ValueError, match="1-D"):
+                svc.enqueue(np.zeros((4, 4), np.int32))
+            with pytest.raises(ValueError, match="leading dim"):
+                svc.enqueue(_keys(rng, N1), kind="sort_kv",
+                            values=np.zeros((3, 2), np.float32),
+                            spec=SortSpec(exchange="allgather"))
+            with pytest.raises(ValueError, match="tag"):
+                # SPEC sets tag=False: argsort must reject like the front door
+                svc.enqueue(_keys(rng, N1), kind="argsort")
+    asyncio.run(run())
+
+
+# -- concurrent load through the warm cache (ISSUE 6 acceptance) -----------
+
+
+def test_concurrent_load_hits_warm_cache(rng, warm):
+    """>= 64 mixed-shape concurrent requests batch through run_batched with
+    an executable-cache hit rate > 0.9 after warmup, every result
+    bit-identical to the direct sort."""
+    from concurrent.futures import ThreadPoolExecutor
+
+    with ServiceRunner(spec=SPEC, config=CONFIG) as runner:
+        runner.reset_metrics()
+        inputs = [_keys(rng, N1 if i % 2 == 0 else N2) for i in range(64)]
+        with ThreadPoolExecutor(16) as pool:
+            results = list(pool.map(runner.submit, inputs))
+        for x, got in zip(inputs, results):
+            np.testing.assert_array_equal(got, np.sort(x))
+        snap = runner.metrics()
+        hits = sum(b["cache"]["hits"] for b in snap["buckets"].values())
+        misses = sum(b["cache"]["misses"] for b in snap["buckets"].values())
+        assert snap["served"] == 64
+        assert snap["batches"] >= 64 / CONFIG.max_batch
+        assert hits > 0
+        assert hits / max(hits + misses, 1) > 0.9, (hits, misses)
+
+
+# -- HTTP front end --------------------------------------------------------
+
+
+def test_http_roundtrip_and_error_mapping(rng, warm):
+    from repro.serve.http import make_server
+
+    with ServiceRunner(spec=SPEC, config=CONFIG) as runner:
+        server = make_server(runner, port=0)
+        host, port = server.server_address[:2]
+        base = f"http://{host}:{port}"
+        threading.Thread(target=server.serve_forever, daemon=True).start()
+        try:
+            x = _keys(rng, N1)
+            req = urllib.request.Request(
+                base + "/v1/sort",
+                data=json.dumps({"keys": x.tolist(),
+                                 "dtype": "int32"}).encode(),
+                headers={"Content-Type": "application/json"}, method="POST")
+            with urllib.request.urlopen(req, timeout=60) as resp:
+                assert resp.status == 200
+                body = json.loads(resp.read())
+            np.testing.assert_array_equal(
+                np.asarray(body["sorted"], np.int32), np.sort(x))
+
+            with urllib.request.urlopen(base + "/healthz", timeout=10) as r:
+                assert json.loads(r.read()) == {"ok": True}
+            with urllib.request.urlopen(base + "/metrics", timeout=10) as r:
+                snap = json.loads(r.read())
+            assert snap["served"] >= 1 and "exec_cache" in snap
+
+            bad = urllib.request.Request(
+                base + "/v1/sort", data=b'{"keys": []}',
+                headers={"Content-Type": "application/json"}, method="POST")
+            with pytest.raises(urllib.error.HTTPError) as exc:
+                urllib.request.urlopen(bad, timeout=10)
+            assert exc.value.code == 400
+        finally:
+            server.shutdown()
