@@ -12,6 +12,12 @@ paying):
                           carries req/s, mean batch occupancy, and the
                           exec-cache hit rate — occupancy should rise with
                           concurrency while us/req falls)
+  serve/chaos_recovery    8 requests under an armed FaultPlan (exchange
+                          capacity clamped + one dispatch crash): us/req
+                          paid for full recovery, with the self-healing
+                          counters (batch/overflow retries, recovered
+                          keys, health) in the detail — report-only, the
+                          price of recovery is allowed to drift
 """
 from __future__ import annotations
 
@@ -65,6 +71,37 @@ def _row(name, wall, snap, detail):
             f"hit_rate={hits / max(hits + misses, 1):.2f}")
 
 
+def _chaos_row():
+    """Recovery-under-fault drill: every batch overflows (clamped dense
+    exchange, recovered by on_overflow="retry") and one dispatch crashes
+    (recovered by batch retry). Times the price of recovery; the counters
+    ride in the detail string."""
+    from repro.runtime import chaos
+
+    n = 8 * 64
+    load = 8
+    rng = np.random.default_rng(1)
+    spec = SortSpec(exchange="dense", on_overflow="retry", tag=False)
+    cfg = ServiceConfig(max_batch=4, max_delay_ms=10.0)
+    inputs = [rng.permutation(4 * n)[:n].astype(np.int32)
+              for _ in range(load)]
+    with ServiceRunner(spec=spec, config=cfg) as runner:
+        with chaos.activate(chaos.FaultPlan(clamp_pair_cap=8,
+                                            crash_at=(1,))):
+            t0 = time.perf_counter()
+            with ThreadPoolExecutor(4) as pool:
+                list(pool.map(runner.submit, inputs))
+            wall = time.perf_counter() - t0
+        snap = runner.metrics()
+    return ("serve/chaos_recovery", round(wall / load * 1e6, 1),
+            f"n={n} c=4 clamp=8 "
+            f"batch_retries={snap['batch_retries']} "
+            f"overflow_retries={snap['overflow_retries']} "
+            f"recovered_keys={snap['overflow_recovered']} "
+            f"executor_restarts={snap['executor_restarts']} "
+            f"health={snap['health']['health']}")
+
+
 def run():
     rng = np.random.default_rng(0)
     _warm(rng)
@@ -79,4 +116,5 @@ def run():
         wall, snap = _drive(inputs, c)
         rows.append(_row(f"serve/throughput_c{c}", wall, snap,
                          f"n={N} int32 c={c}"))
+    rows.append(_chaos_row())
     return rows

@@ -75,6 +75,11 @@ class HSSConfig:
         fixed ratios s_j = (2 ln p / eps)^{j/k}.
     out_slack:
         output-buffer slack multiplier on (1+eps)*N/p for the exchanged shard.
+    capacity_scale:
+        uniform multiplier on every statically-sized buffer (sample caps
+        here; pair/out caps in ExchangeConfig). 1.0 in steady state; the
+        overflow-retry policy (SortSpec.on_overflow="retry") re-launches
+        with 2^k so one knob relieves every overflow source at once.
     kernel_policy:
         compute-backend selection for the local sort, sample sorts, and
         probe ranking: "auto" (Pallas kernels on TPU, XLA elsewhere),
@@ -86,6 +91,7 @@ class HSSConfig:
     sample_per_shard: int = 0
     adaptive: bool = True
     out_slack: float = 1.0
+    capacity_scale: float = 1.0
     kernel_policy: str = "auto"
 
     def resolved_rounds(self, p: int) -> int:
@@ -93,12 +99,16 @@ class HSSConfig:
 
     def resolved_sample_cap(self, p: int) -> int:
         if self.sample_per_shard > 0:
-            return self.sample_per_shard
-        k = self.resolved_rounds(p)
-        ratio = final_sampling_ratio(p, self.eps) ** (1.0 / k)
-        # Expected per-shard sample per round is ~ratio (round 1) and
-        # <= 4*ratio later rounds (Lemma 4.6, constants incl.); x2 slack.
-        return int(round_up(max(8, math.ceil(8.0 * ratio)), 8))
+            cap = self.sample_per_shard
+        else:
+            k = self.resolved_rounds(p)
+            ratio = final_sampling_ratio(p, self.eps) ** (1.0 / k)
+            # Expected per-shard sample per round is ~ratio (round 1) and
+            # <= 4*ratio later rounds (Lemma 4.6, constants incl.); x2 slack.
+            cap = int(round_up(max(8, math.ceil(8.0 * ratio)), 8))
+        if self.capacity_scale != 1.0:
+            cap = int(round_up(max(8, int(cap * self.capacity_scale)), 8))
+        return cap
 
 
 def sampling_ratios(p: int, eps: float, k: int) -> np.ndarray:

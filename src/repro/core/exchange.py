@@ -1,12 +1,19 @@
 """Key redistribution (the data-exchange phase, paper Section 3.1 step 3).
 
-Three strategies, selected by `ExchangeConfig.strategy` (DESIGN.md Section 2):
+Four strategies, selected by `ExchangeConfig.strategy` (DESIGN.md Section 2):
 
   dense     capacity-padded jax.lax.all_to_all. One fused all-to-all per sort —
             the TPU-idiomatic MPI_Alltoallv equivalent for well-spread inputs.
             Per-(src,dst) capacity is static; overflowing keys are dropped AND
             counted (psum), so callers can detect and re-run with a larger
             factor. CPU-compilable => used by the multi-pod dry-run.
+  dense_spill  the dense channel plus an exact spill channel: keys beyond a
+            pair's capacity are compacted into a small side buffer,
+            all_gather'ed, and each destination picks its key-range windows
+            — so send-side overflow costs extra bandwidth instead of
+            dropped keys. This is the `SortSpec(on_overflow="spill")`
+            trace; CPU-compilable (no ragged opcode needed), overflow can
+            only come from receive-side truncation.
   ragged    jax.lax.ragged_all_to_all — exact alltoallv. XLA:TPU only (the CPU
             ThunkEmitter lacks the opcode as of jax 0.8.2), so it is the
             production path on hardware but excluded from CPU tests/dry-run.
@@ -46,16 +53,25 @@ def _kernels():
 
 @dataclasses.dataclass(frozen=True)
 class ExchangeConfig:
-    strategy: str = "dense"      # dense | ragged | allgather
+    strategy: str = "dense"      # dense | dense_spill | ragged | allgather
     pair_factor: float = 3.0      # dense: per-(src,dst) capacity = factor*n/p
     out_slack: float = 1.0        # extra slack on the (1+eps) output capacity
+    capacity_scale: float = 1.0   # overflow-retry escalation multiplier
     kernel_policy: str = "auto"   # post-exchange merge backend (dispatch)
 
     def pair_cap(self, n_local: int, p: int) -> int:
-        return min(n_local, round_up(max(8, int(self.pair_factor * n_local / p)), 8))
+        # The chaos clamp (fault injection) applies to the BASE capacity;
+        # `capacity_scale` multiplies after it, so the overflow-retry
+        # escalation can out-grow an injected clamp — which is exactly the
+        # recovery path the clamp exists to exercise.
+        from repro.runtime import chaos
+        base = chaos.clamp_pair_cap(max(8, int(self.pair_factor * n_local / p)))
+        return min(n_local, round_up(max(1, int(base * self.capacity_scale)), 8))
 
     def out_cap(self, n_local: int, p: int, eps: float) -> int:
-        return round_up(int((1.0 + eps) * self.out_slack * n_local) + 8, 8)
+        return round_up(
+            int((1.0 + eps) * self.out_slack * self.capacity_scale * n_local)
+            + 8, 8)
 
     def ragged_slot(self, n_local: int, p: int, eps: float) -> int:
         """Static per-run capacity of the ragged merge tree: double the
@@ -114,6 +130,89 @@ def exchange_dense(local_sorted, splitter_keys, *, axis_name, p, cfg, eps,
     trunc = jnp.maximum(n_recv - out_cap, 0)
     overflow = overflow + jax.lax.psum(trunc, axis_name)
     return out, n_recv - trunc, overflow
+
+
+def exchange_dense_spill(local_sorted, splitter_keys, *, axis_name, p, cfg,
+                         eps, n_valid=None):
+    """Dense all-to-all plus an exact spill channel for over-capacity keys.
+
+    The dense channel runs exactly as `exchange_dense` (same pair_cap, same
+    fused all_to_all). Keys a source would have dropped — positions past
+    their destination slice's capacity — are instead compacted into a
+    sentinel-padded (n_local,) spill buffer and all_gather'ed; each
+    destination picks its key-range window out of every source's spill run
+    (the same two-binary-searches-per-run trick as `exchange_allgather`,
+    restricted to the spilled keys) and merges those windows together with
+    the dense runs. Spilled keys land on the same destination the dense
+    slices would have sent them to (windows are value-range based and
+    destination slices are value-contiguous), so the result is
+    bit-identical to an uncapped dense exchange.
+
+    Cost: one extra all_gather of the spill buffer — O(p * n_local) worst
+    case but proportional to actual spill in practice (the buffer is
+    sentinel-compacted; with zero spill the gather moves sentinels and the
+    merge drops them). Overflow can only be receive-side truncation
+    (out_cap), which the (1+eps) guarantee rules out for converged
+    splitters — so this is the capacity-overflow-proof CPU-compilable
+    path behind `SortSpec(on_overflow="spill")`.
+    """
+    n = local_sorted.shape[0]
+    cap = cfg.pair_cap(n, p)
+    out_cap = cfg.out_cap(n, p, eps)
+    sent_hi = hi_sentinel(local_sorted.dtype)
+    me = jax.lax.axis_index(axis_name)
+    nv = jnp.asarray(n if n_valid is None else n_valid, jnp.int32)
+
+    starts, counts = destination_slices(local_sorted, splitter_keys, n_valid)
+    sent_counts = jnp.minimum(counts, cap)
+
+    # -- dense channel (identical to exchange_dense)
+    idx = starts[:, None] + jnp.arange(cap, dtype=jnp.int32)[None, :]
+    valid = jnp.arange(cap, dtype=jnp.int32)[None, :] < sent_counts[:, None]
+    buf = jnp.where(valid, local_sorted[jnp.clip(idx, 0, n - 1)], sent_hi)
+    recv = jax.lax.all_to_all(buf, axis_name, split_axis=0, concat_axis=0,
+                              tiled=False)
+    recv_counts = jax.lax.all_to_all(
+        sent_counts.reshape(p, 1), axis_name, 0, 0, tiled=False).reshape(p)
+
+    # -- spill channel: position i spills iff its offset within its
+    # destination slice is past that pair's capacity
+    dispatch, gather_runs = _kernels()
+    pos = jnp.arange(n, dtype=jnp.int32)
+    dest = jnp.searchsorted(starts[1:], pos, side="right").astype(jnp.int32)
+    offset = pos - starts[dest]
+    spilled = (offset >= sent_counts[dest]) & (pos < nv)
+    n_spill = jnp.sum(spilled.astype(jnp.int32))
+    spill = dispatch.local_sort(   # compact: spilled keys stay sorted
+        jnp.where(spilled, local_sorted, sent_hi), policy=cfg.kernel_policy)
+    every = jax.lax.all_gather(spill, axis_name, tiled=True)     # (p*n,)
+    nv_sp = jax.lax.all_gather(n_spill[None], axis_name, tiled=True)  # (p,)
+    rows = every.reshape(p, n)
+    lo = splitter_keys[jnp.maximum(me - 1, 0)]
+    hi = splitter_keys[jnp.minimum(me, p - 2)]
+    a = jax.vmap(lambda r: jnp.searchsorted(r, lo, side="left"))(rows)
+    b = jax.vmap(lambda r: jnp.searchsorted(r, hi, side="left"))(rows)
+    a = jnp.where(me > 0, a.astype(jnp.int32), 0)
+    b = jnp.where(me < p - 1, b.astype(jnp.int32), n)
+    s_ends = jnp.minimum(b, nv_sp)
+    s_starts = jnp.minimum(a, s_ends)
+    s_counts = s_ends - s_starts
+    flat_starts = jnp.arange(p, dtype=jnp.int32) * n + s_starts
+    spill_runs = gather_runs(every, flat_starts, s_counts, n)    # (p, n)
+
+    # -- merge both channels: p dense runs + p spill-window runs
+    if cap < n:
+        dense_rows = jnp.concatenate(
+            [recv, jnp.full((p, n - cap), sent_hi, recv.dtype)], axis=1)
+    else:
+        dense_rows = recv
+    merged = dispatch.merge_runs(
+        jnp.concatenate([dense_rows, spill_runs], axis=0),
+        policy=cfg.kernel_policy)
+    out = _cap_to(merged, out_cap)
+    n_recv = jnp.sum(recv_counts) + jnp.sum(s_counts)
+    trunc = jnp.maximum(n_recv - out_cap, 0)
+    return out, n_recv - trunc, jax.lax.psum(trunc, axis_name)
 
 
 def exchange_allgather(local_sorted, splitter_keys, *, axis_name, p, cfg, eps,
@@ -301,14 +400,33 @@ def exchange_ragged_batched(local_sorted, splitter_keys, *, axis_name, p,
     return jnp.stack(outs), jnp.stack(nvs), jnp.stack(ovfs)
 
 
+def exchange_dense_spill_batched(local_sorted, splitter_keys, *, axis_name,
+                                 p, cfg, eps, n_valid=None):
+    """Per-request dense_spill loop: still ONE launch for the batch, B x
+    the collectives of a single request inside it (the spill channel's
+    per-row windows do not batch-fuse yet — same status as the ragged
+    strategy; DESIGN.md Section 6 tracks the fusion)."""
+    b, n = local_sorted.shape
+    rows_valid = _rows_valid(n_valid, b, n)
+    outs, nvs, ovfs = [], [], []
+    for i in range(b):
+        o, nv, ov = exchange_dense_spill(
+            local_sorted[i], splitter_keys[i], axis_name=axis_name, p=p,
+            cfg=cfg, eps=eps, n_valid=rows_valid[i])
+        outs.append(o), nvs.append(nv), ovfs.append(ov)
+    return jnp.stack(outs), jnp.stack(nvs), jnp.stack(ovfs)
+
+
 _STRATEGIES = {
     "dense": exchange_dense,
+    "dense_spill": exchange_dense_spill,
     "ragged": exchange_ragged,
     "allgather": exchange_allgather,
 }
 
 _STRATEGIES_BATCHED = {
     "dense": exchange_dense_batched,
+    "dense_spill": exchange_dense_spill_batched,
     "ragged": exchange_ragged_batched,
     "allgather": exchange_allgather_batched,
 }

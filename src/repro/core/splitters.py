@@ -269,6 +269,7 @@ def hss_splitters_batched(
     p: int,
     cfg: HSSConfig,
     rng: jax.Array,
+    initial_probes: jax.Array | None = None,
 ):
     """Splitter determination for B independent sorts in one pipeline.
 
@@ -283,6 +284,11 @@ def hss_splitters_batched(
     Every request draws from the same per-shard rng stream, which is
     exactly what B sequential `hss_splitters` calls with the same seed do —
     so the result is bit-identical to the per-request loop.
+
+    initial_probes: optional (B, m) per-request sorted probe rows to
+    warm-start round 1 with (the unbatched path's ChaNGa trick; the
+    overflow-retry policy feeds the failed attempt's splitters back in
+    here so a re-launch starts from converged partition state).
 
     Returns (splitter_keys (B, p-1), splitter_ranks (B, p-1), SplitterStats
     with per-round arrays of shape (k, B) and rounds_used of shape (B,)).
@@ -303,6 +309,15 @@ def hss_splitters_batched(
     vm_union = jax.vmap(active_union_size, in_axes=(0, None))
     vm_members = jax.vmap(gamma_membership)
     vm_refine = jax.vmap(refine, in_axes=(0, 0, 0, None, None))
+
+    if initial_probes is not None:
+        # Free warm-start (batched): rank every request's probe row with
+        # one batched probe-rank pass + one psum, then refine per row.
+        lr = dispatch.probe_ranks_batched(
+            local_sorted, initial_probes, policy=cfg.kernel_policy,
+            assume_sorted=True)
+        pr = jax.lax.psum(lr, axis_name)
+        state0 = vm_refine(state0, initial_probes, pr, targets, tol)
 
     def round_body(carry, j):
         state, key = carry

@@ -1,3 +1,34 @@
-from repro.runtime.ft import StepTimer, TrainSupervisor
+"""repro.runtime — fault tolerance and chaos tooling.
 
-__all__ = ["StepTimer", "TrainSupervisor"]
+Lazily exported (PEP 562): `repro.runtime.ft` pulls in the checkpoint
+stack (and transitively jax); `repro.runtime.chaos` is stdlib+numpy and
+must stay importable from entry points that set XLA flags before jax
+loads — keep the package init free of eager heavy imports.
+"""
+import importlib
+
+_LAZY = {
+    "StepTimer": "repro.runtime.ft",
+    "TrainSupervisor": "repro.runtime.ft",
+    "SupervisedExecutor": "repro.runtime.ft",
+    "FaultPlan": "repro.runtime.chaos",
+    "InjectedFault": "repro.runtime.chaos",
+    "ExecutorDeath": "repro.runtime.chaos",
+}
+
+__all__ = ["ExecutorDeath", "FaultPlan", "InjectedFault", "StepTimer",
+           "SupervisedExecutor", "TrainSupervisor", "chaos"]
+
+
+def __getattr__(name: str):
+    if name == "chaos":
+        return importlib.import_module("repro.runtime.chaos")
+    module = _LAZY.get(name)
+    if module is None:
+        raise AttributeError(
+            f"module 'repro.runtime' has no attribute {name!r}")
+    return getattr(importlib.import_module(module), name)
+
+
+def __dir__():
+    return sorted(__all__)

@@ -1,0 +1,176 @@
+"""Deterministic fault injection for the sort pipeline (DESIGN.md Sec. 8).
+
+A `FaultPlan` describes a reproducible set of faults; `activate(plan)`
+arms it process-wide for the duration of a `with` block. Injection points
+are pulled, not pushed: production code consults this module at two
+well-defined seams and pays nothing when no plan is active —
+
+  * `ExchangeConfig.pair_cap` calls `clamp_pair_cap()` so a plan can
+    shrink the dense exchange's per-(src,dst) capacity and force *real*
+    send-side overflow (the scenario `SortSpec.on_overflow` policies
+    recover from). The clamp is trace-affecting, so `trace_token()` is
+    folded into every executable-cache key / spec fingerprint — a clamped
+    trace can never be served from (or poison) the unclamped cache line.
+  * `SortService._run_batch` calls `on_dispatch(xs)` before launching a
+    batch, which injects — keyed on a deterministic dispatch counter —
+    straggler sleeps, dispatch crashes (`InjectedFault`), executor-thread
+    death (`ExecutorDeath`, a BaseException so nothing short of the
+    supervised executor absorbs it), and poison requests (any batch whose
+    keys contain `poison_key` fails, reproducibly, until bisection
+    isolates the poisoned request).
+
+Everything is stdlib + numpy; importable without pulling in jax.
+
+    from repro.runtime import chaos
+    plan = chaos.FaultPlan(clamp_pair_cap=8, crash_at=(1,))
+    with chaos.activate(plan):
+        ...   # sorts overflow, dispatch 1 crashes; both recover
+    chaos.stats()  # what actually fired
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+import time
+
+import numpy as np
+
+
+class InjectedFault(RuntimeError):
+    """A fault raised on purpose by an active FaultPlan."""
+
+
+class ExecutorDeath(BaseException):
+    """Simulated dispatch-thread death. Deliberately NOT an Exception:
+    ordinary `except Exception` recovery must not swallow it — only the
+    supervised executor's restart path (repro.runtime.ft) handles it."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """One reproducible chaos scenario.
+
+    clamp_pair_cap    clamp the dense exchange's per-(src,dst) capacity to
+                      this many keys (pre `capacity_scale`), forcing real
+                      send-side overflow. None = no clamp.
+    straggler_at      dispatch indices that sleep `straggler_delay_s`
+                      before running (drives the StepTimer signal).
+    straggler_delay_s seconds of injected delay per straggler dispatch.
+    crash_at          dispatch indices that raise InjectedFault (an
+                      ordinary batch failure: retry/bisection territory).
+    die_at            dispatch indices that raise ExecutorDeath (the
+                      dispatch thread is gone: supervisor territory).
+    poison_key        any dispatched batch containing this key value
+                      raises InjectedFault — the deterministic "poison
+                      request" that only bisection can isolate.
+    """
+
+    clamp_pair_cap: int | None = None
+    straggler_at: tuple = ()
+    straggler_delay_s: float = 0.0
+    crash_at: tuple = ()
+    die_at: tuple = ()
+    poison_key: int | float | None = None
+
+
+class _ActivePlan:
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self.lock = threading.Lock()
+        self.dispatches = 0
+        self.injected: dict = {"straggler": 0, "crash": 0, "death": 0,
+                               "poison": 0, "clamp_traces": 0}
+
+
+_lock = threading.Lock()
+_active: _ActivePlan | None = None
+
+
+@contextlib.contextmanager
+def activate(plan: FaultPlan):
+    """Arm `plan` process-wide for the duration of the with-block. Plans
+    do not nest — chaos scenarios are top-level test/CLI constructs."""
+    global _active
+    with _lock:
+        if _active is not None:
+            raise RuntimeError("a FaultPlan is already active")
+        state = _ActivePlan(plan)
+        _active = state
+    try:
+        yield state
+    finally:
+        with _lock:
+            _active = None
+
+
+def active() -> FaultPlan | None:
+    state = _active
+    return None if state is None else state.plan
+
+
+def trace_token():
+    """Hashable token of the trace-affecting faults of the active plan
+    (None when traces are unaffected). Folded into spec fingerprints and
+    executable-cache keys so chaos runs compile and cache separately."""
+    state = _active
+    if state is None or state.plan.clamp_pair_cap is None:
+        return None
+    with state.lock:
+        state.injected["clamp_traces"] += 1
+    return ("chaos-clamp", state.plan.clamp_pair_cap)
+
+
+def clamp_pair_cap(cap: int) -> int:
+    """Exchange-capacity clamp consulted by ExchangeConfig.pair_cap
+    (applied BEFORE `capacity_scale`, so overflow-retry escalation still
+    works against a clamped base — exactly the recovery under test)."""
+    state = _active
+    if state is None or state.plan.clamp_pair_cap is None:
+        return cap
+    return min(cap, int(state.plan.clamp_pair_cap))
+
+
+def on_dispatch(xs=None) -> int:
+    """Called by the serving layer at the top of every batch dispatch.
+    Applies the active plan's dispatch-indexed faults; returns the
+    dispatch index (and -1 when no plan is active)."""
+    state = _active
+    if state is None:
+        return -1
+    plan = state.plan
+    with state.lock:
+        i = state.dispatches
+        state.dispatches += 1
+        straggle = i in plan.straggler_at and plan.straggler_delay_s > 0
+        die = i in plan.die_at
+        crash = i in plan.crash_at
+        if straggle:
+            state.injected["straggler"] += 1
+    if straggle:
+        time.sleep(plan.straggler_delay_s)
+    if die:
+        with state.lock:
+            state.injected["death"] += 1
+        raise ExecutorDeath(f"injected executor death at dispatch {i}")
+    if crash:
+        with state.lock:
+            state.injected["crash"] += 1
+        raise InjectedFault(f"injected dispatch crash at dispatch {i}")
+    if plan.poison_key is not None and xs is not None:
+        if bool(np.any(np.asarray(xs) == plan.poison_key)):
+            with state.lock:
+                state.injected["poison"] += 1
+            raise InjectedFault(
+                f"poison key {plan.poison_key!r} in batch (dispatch {i})")
+    return i
+
+
+def stats() -> dict:
+    """Counters of the active plan (what fired so far). Empty dict when
+    no plan is active — call inside the `activate` block."""
+    state = _active
+    if state is None:
+        return {}
+    with state.lock:
+        return {"dispatches": state.dispatches, **state.injected}

@@ -18,7 +18,10 @@ signal the train loop gets.
 """
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
+import statistics
+import threading
 import time
 from typing import Callable
 
@@ -27,17 +30,39 @@ from repro.ckpt import latest_step, restore, save
 
 @dataclasses.dataclass
 class StepTimer:
+    """EWMA straggler detector over step wall times.
+
+    The one-sample seed (warmup=1, the historical behavior) has a blind
+    spot: if the FIRST step is the slow one — a cold compile, a straggling
+    host at startup — it becomes the baseline and every healthy step after
+    it looks fast. `warmup=k` withholds judgment for the first k steps and
+    seeds the EWMA from their *median*, which is robust to one aberrant
+    sample among the first k. `prior` seeds the EWMA explicitly (e.g. from
+    a previous run's snapshot) and skips warmup entirely.
+    """
+
     alpha: float = 0.1
     threshold: float = 2.0
+    warmup: int = 1
+    prior: float | None = None
     ewma: float = 0.0
     stragglers: int = 0
     steps: int = 0
+    _warm: list = dataclasses.field(default_factory=list, repr=False)
+
+    def __post_init__(self):
+        if self.prior is not None and self.ewma == 0.0:
+            self.ewma = float(self.prior)
 
     def record(self, dt: float) -> bool:
         """Returns True if this step was a straggler."""
         self.steps += 1
         if self.ewma == 0.0:
-            self.ewma = dt
+            self._warm.append(dt)
+            if len(self._warm) < max(1, self.warmup):
+                return False
+            self.ewma = statistics.median(self._warm)
+            self._warm.clear()
             return False
         slow = dt > self.threshold * self.ewma
         self.stragglers += int(slow)
@@ -50,9 +75,65 @@ class StepTimer:
                 "stragglers": self.stragglers, "threshold": self.threshold}
 
     def reset(self) -> None:
-        self.ewma = 0.0
+        self.ewma = float(self.prior) if self.prior is not None else 0.0
         self.stragglers = 0
         self.steps = 0
+        self._warm.clear()
+
+
+class SupervisedExecutor:
+    """A single-worker ThreadPoolExecutor under restart supervision.
+
+    ThreadPoolExecutor's worker loop routes every exception a task raises —
+    Exception *and* BaseException — into the task's future, so a plain pool
+    can never lose its worker to a task. The failure mode this class exists
+    for is the other direction: the consumer of those futures observes a
+    fault that poisons the *worker itself* (repro.runtime.chaos.ExecutorDeath
+    stands in for a wedged device runtime or a dead host thread) and calls
+    `report_death()`. The supervisor then tears the pool down
+    (`cancel_futures=True` — a dead worker cannot drain its queue; pending
+    tasks surface as CancelledError for the submitter to retry) and lazily
+    builds a fresh one, up to `max_restarts` times, mirroring
+    TrainSupervisor's bounded-restart policy one layer down.
+    """
+
+    def __init__(self, *, max_restarts: int = 8,
+                 thread_name_prefix: str = "supervised"):
+        self.max_restarts = max_restarts
+        self.restarts = 0
+        self._prefix = thread_name_prefix
+        self._lock = threading.Lock()
+        self._pool = self._build()
+
+    def _build(self) -> concurrent.futures.ThreadPoolExecutor:
+        return concurrent.futures.ThreadPoolExecutor(
+            max_workers=1,
+            thread_name_prefix=f"{self._prefix}-{self.restarts}")
+
+    def submit(self, fn, /, *args, **kwargs):
+        with self._lock:
+            return self._pool.submit(fn, *args, **kwargs)
+
+    def report_death(self) -> int:
+        """Replace the poisoned pool with a fresh one. Returns the restart
+        ordinal. Raises RuntimeError once the restart budget is exhausted."""
+        with self._lock:
+            self.restarts += 1
+            if self.restarts > self.max_restarts:
+                raise RuntimeError(
+                    f"executor exceeded max_restarts={self.max_restarts}")
+            old, self._pool = self._pool, None
+            old.shutdown(wait=False, cancel_futures=True)
+            self._pool = self._build()
+            return self.restarts
+
+    def shutdown(self, wait: bool = True) -> None:
+        with self._lock:
+            self._pool.shutdown(wait=wait, cancel_futures=not wait)
+
+    def snapshot(self) -> dict:
+        return {"restarts": self.restarts,
+                "max_restarts": self.max_restarts}
 
 
 class TrainSupervisor:

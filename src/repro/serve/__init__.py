@@ -7,7 +7,11 @@ the compiled-executable cache uses), flushes each bucket on
 batch-size-or-deadline, dispatches ONE `sort_batched` launch per batch,
 and resolves per-request futures in input order — with admission control,
 per-request deadlines, graceful drain, a metrics registry, and a
-stdlib-only HTTP front end. DESIGN.md Section 7 documents the lifecycle.
+stdlib-only HTTP front end. DESIGN.md Section 7 documents the lifecycle;
+Section 8 the self-healing layer (batch retry + bisection isolation,
+supervised dispatch executor, per-bucket circuit breakers with a degraded
+per-request fallback path, and the ok | degraded | tripped health state
+served by /healthz).
 
     from repro.serve import ServiceConfig, SortService
     from repro.sort import SortSpec
@@ -31,6 +35,8 @@ from repro.serve.errors import (
 _LAZY = {
     "DynamicBatcher": "repro.serve.batcher",
     "Request": "repro.serve.batcher",
+    "BreakerBoard": "repro.serve.breaker",
+    "CircuitBreaker": "repro.serve.breaker",
     "MetricsRegistry": "repro.serve.metrics",
     "ServiceConfig": "repro.serve.service",
     "ServiceRunner": "repro.serve.service",
@@ -38,9 +44,9 @@ _LAZY = {
 }
 
 __all__ = [
-    "DeadlineExceeded", "DynamicBatcher", "MetricsRegistry", "Overloaded",
-    "Request", "ServeError", "ServiceClosed", "ServiceConfig",
-    "ServiceRunner", "SortService",
+    "BreakerBoard", "CircuitBreaker", "DeadlineExceeded", "DynamicBatcher",
+    "MetricsRegistry", "Overloaded", "Request", "ServeError",
+    "ServiceClosed", "ServiceConfig", "ServiceRunner", "SortService",
 ]
 
 

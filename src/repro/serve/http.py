@@ -11,10 +11,18 @@ Endpoints (JSON in, JSON out):
   POST /v1/sort_kv  + "values": [...]          -> {"keys": ..., "values": ...}
   GET  /metrics     MetricsRegistry snapshot (per-bucket + exec-cache)
   POST /metrics/reset
-  GET  /healthz
+  GET  /healthz     breaker-board health: {"health": "ok"|"degraded"|
+                    "tripped", "breakers": {...}, "executor": {...}} —
+                    200 while the service can serve (ok/degraded, degraded
+                    meaning open breakers are bypassed onto the per-request
+                    fallback path), 503 once tripped (an open breaker AND a
+                    failing fallback).
 
 Status mapping of the typed service errors: Overloaded -> 429,
 DeadlineExceeded -> 504, ServiceClosed -> 503, bad request -> 400.
+Backpressure responses (429/503) carry a Retry-After header so
+well-behaved clients pace their retries instead of hammering the
+admission gate.
 
 `ThreadingHTTPServer` gives one thread per connection; every handler
 blocks on `ServiceRunner.submit`, so concurrency here is exactly the
@@ -49,6 +57,7 @@ from repro.sort import SortSpec
 # valued stays server-side
 SPEC_FIELDS = ("algorithm", "eps", "rounds", "sample_per_shard", "adaptive",
                "total_sample", "s", "exchange", "pair_factor", "out_slack",
+               "on_overflow", "max_overflow_retries",
                "stable", "tag", "seed", "kernel_policy")
 
 _ROUTES = {"/v1/sort": "sort", "/v1/argsort": "argsort",
@@ -97,17 +106,26 @@ def make_handler(runner: ServiceRunner, *, verbose: bool = False):
             if verbose:
                 super().log_message(fmt, *args)
 
-        def _reply(self, code: int, payload: dict) -> None:
+        def _reply(self, code: int, payload: dict,
+                   retry_after: float | None = None) -> None:
             data = json.dumps(payload).encode()
             self.send_response(code)
             self.send_header("Content-Type", "application/json")
             self.send_header("Content-Length", str(len(data)))
+            if retry_after is not None:
+                self.send_header("Retry-After",
+                                 str(max(1, int(round(retry_after)))))
             self.end_headers()
             self.wfile.write(data)
 
         def do_GET(self):
             if self.path == "/healthz":
-                self._reply(200, {"ok": True})
+                health = runner.health()
+                if health["health"] == "tripped":
+                    cooldown = runner.service.config.breaker_cooldown_s
+                    self._reply(503, health, retry_after=cooldown)
+                else:
+                    self._reply(200, health)
             elif self.path == "/metrics":
                 self._reply(200, runner.metrics())
             else:
@@ -139,12 +157,15 @@ def make_handler(runner: ServiceRunner, *, verbose: bool = False):
             except (BadRequest, ValueError, json.JSONDecodeError) as e:
                 self._reply(400, {"error": str(e)})
             except Overloaded as e:
+                # pace retries to roughly one flush interval
+                backoff = runner.service.config.max_delay_ms / 1e3
                 self._reply(429, {"error": str(e), "queued": e.queued,
-                                  "in_flight": e.in_flight})
+                                  "in_flight": e.in_flight},
+                            retry_after=backoff)
             except DeadlineExceeded as e:
                 self._reply(504, {"error": str(e)})
             except ServiceClosed as e:
-                self._reply(503, {"error": str(e)})
+                self._reply(503, {"error": str(e)}, retry_after=5)
             except Exception as e:   # batch-level failure
                 self._reply(500, {"error": f"{type(e).__name__}: {e}"})
             else:
@@ -176,7 +197,9 @@ def main(argv=None) -> None:
     ap.add_argument("--port", type=int, default=8080)
     ap.add_argument("--algorithm", default="hss")
     ap.add_argument("--exchange", default="dense",
-                    choices=["dense", "ragged", "allgather"])
+                    choices=["dense", "dense_spill", "ragged", "allgather"])
+    ap.add_argument("--on-overflow", default="raise",
+                    choices=["raise", "retry", "spill"])
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-delay-ms", type=float, default=5.0)
     ap.add_argument("--max-queue-depth", type=int, default=256)
@@ -193,7 +216,8 @@ def main(argv=None) -> None:
         print("warning: single CPU device (jax read XLA_FLAGS before it "
               "was set?) — run `python -m repro.serve.http`, or export "
               "XLA_FLAGS=--xla_force_host_platform_device_count=8")
-    spec = SortSpec(algorithm=args.algorithm, exchange=args.exchange)
+    spec = SortSpec(algorithm=args.algorithm, exchange=args.exchange,
+                    on_overflow=args.on_overflow)
     config = ServiceConfig(
         max_batch=args.max_batch, max_delay_ms=args.max_delay_ms,
         max_queue_depth=args.max_queue_depth,

@@ -9,9 +9,14 @@ operator of a sort-as-a-service deployment watches:
     which p50/p99 are computed at snapshot time;
   * global counters — admissions, typed rejections, expired/cancelled
     requests, served results;
-  * a batch-time EWMA reusing `repro.runtime.ft.StepTimer`, so a slow
-    batch (cold compile, noisy neighbor) raises the same straggler signal
-    the train supervisor uses;
+  * a batch-time EWMA reusing `repro.runtime.ft.StepTimer` (seeded from
+    the median of the first `straggler_warmup` batches so a slow FIRST
+    batch — the cold compile — cannot poison the baseline), so a slow
+    batch raises the same straggler signal the train supervisor uses;
+  * self-healing counters (DESIGN.md Section 8) — batch retries,
+    bisection isolations, executor restarts, degraded-path requests, and
+    engine-level overflow-recovery totals — plus a pluggable `health`
+    provider (the breaker board) merged into the snapshot;
   * the process-wide compiled-executable cache counters
     (`repro.sort.driver.exec_cache.stats()`), pulled at snapshot time.
 
@@ -50,6 +55,9 @@ class _BucketMetrics:
         self.cache_misses = 0
         self.expired = 0
         self.errors = 0
+        self.retries = 0
+        self.bisections = 0
+        self.degraded = 0
         self.latency_s = deque(maxlen=window)
 
     def as_dict(self) -> dict:
@@ -73,6 +81,9 @@ class _BucketMetrics:
             },
             "expired": self.expired,
             "errors": self.errors,
+            "retries": self.retries,
+            "bisections": self.bisections,
+            "degraded": self.degraded,
             "latency_ms": {
                 "p50": 1e3 * percentile(lat, 0.50),
                 "p99": 1e3 * percentile(lat, 0.99),
@@ -87,11 +98,13 @@ class MetricsRegistry:
     and the dispatch executor thread alike, snapshotted from anywhere."""
 
     def __init__(self, *, window: int = 2048, straggler_threshold: float = 3.0,
-                 cache_stats=None):
+                 straggler_warmup: int = 3, cache_stats=None, health=None):
         self._lock = threading.Lock()
         self._window = window
         self._straggler_threshold = straggler_threshold
+        self._straggler_warmup = straggler_warmup
         self._cache_stats = cache_stats   # callable -> dict, or None
+        self._health = health             # callable -> dict, or None
         self._reset_locked()
 
     def _reset_locked(self):
@@ -103,7 +116,15 @@ class MetricsRegistry:
         self.cancelled = 0
         self.errors = 0
         self.batches = 0
-        self.batch_timer = StepTimer(threshold=self._straggler_threshold)
+        self.batch_retries = 0
+        self.bisections = 0
+        self.executor_restarts = 0
+        self.degraded_requests = 0
+        self.degraded_errors = 0
+        self.overflow_retries = 0
+        self.overflow_recovered = 0
+        self.batch_timer = StepTimer(threshold=self._straggler_threshold,
+                                     warmup=self._straggler_warmup)
 
     def _bucket(self, key) -> _BucketMetrics:
         b = self._buckets.get(key)
@@ -148,6 +169,36 @@ class MetricsRegistry:
                 b.cache_misses += cache_delta.get("misses", 0)
             return self.batch_timer.record(compute_s)
 
+    def observe_batch_retry(self, key) -> None:
+        with self._lock:
+            self.batch_retries += 1
+            self._bucket(key).retries += 1
+
+    def observe_bisection(self, key) -> None:
+        with self._lock:
+            self.bisections += 1
+            self._bucket(key).bisections += 1
+
+    def observe_executor_restart(self) -> None:
+        with self._lock:
+            self.executor_restarts += 1
+
+    def observe_degraded(self, key, *, ok: bool = True) -> None:
+        with self._lock:
+            self.degraded_requests += 1
+            self._bucket(key).degraded += 1
+            if not ok:
+                self.degraded_errors += 1
+
+    def observe_recovery(self, key, recovery) -> None:
+        """Engine-level overflow recovery (repro.sort.RecoveryStats)
+        attached to a batch output by `on_overflow="retry"`."""
+        if recovery is None or recovery.attempts <= 1:
+            return
+        with self._lock:
+            self.overflow_retries += recovery.attempts - 1
+            self.overflow_recovered += recovery.recovered_overflow
+
     def observe_result(self, key, latency_s: float, *, ok: bool = True) -> None:
         with self._lock:
             b = self._bucket(key)
@@ -170,12 +221,21 @@ class MetricsRegistry:
                 "cancelled": self.cancelled,
                 "errors": self.errors,
                 "batches": self.batches,
+                "batch_retries": self.batch_retries,
+                "bisections": self.bisections,
+                "executor_restarts": self.executor_restarts,
+                "degraded_requests": self.degraded_requests,
+                "degraded_errors": self.degraded_errors,
+                "overflow_retries": self.overflow_retries,
+                "overflow_recovered": self.overflow_recovered,
                 "batch_timer": self.batch_timer.snapshot(),
                 "buckets": {repr(k): b.as_dict()
                             for k, b in self._buckets.items()},
             }
         if self._cache_stats is not None:
             snap["exec_cache"] = self._cache_stats()
+        if self._health is not None:
+            snap["health"] = self._health()
         return snap
 
     def reset(self) -> None:

@@ -23,6 +23,19 @@ surviving ones), graceful drain on shutdown, and a `MetricsRegistry`
 (per-bucket occupancy/flush/latency/cache counters; `GET /metrics` in the
 HTTP front end serves its snapshot).
 
+Self-healing (DESIGN.md Section 8): a failed batch retries with
+exponential backoff; retries exhausted, it bisects — halves run
+independently, so one poison request fails alone and its batchmates are
+served. The dispatch executor is a `SupervisedExecutor`: a worker
+poisoned mid-batch (`repro.runtime.chaos.ExecutorDeath` stands in for a
+wedged device runtime) is torn down and rebuilt, bounded by
+`executor_max_restarts`. A per-bucket `CircuitBreaker` trips after
+`breaker_threshold` consecutive batch failures and routes the bucket to a
+degraded per-request path (unbatched `repro.sort` front-door calls under
+`fallback_kernel_policy`) until a cooldown probe succeeds; the breaker
+board aggregates into the ok | degraded | tripped health state served by
+`GET /healthz`.
+
 Threaded callers (the stdlib HTTP front end, benchmarks) use
 `ServiceRunner`, which owns the event loop in a daemon thread and exposes
 a blocking `submit`.
@@ -33,17 +46,22 @@ import asyncio
 import dataclasses
 import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
 from typing import Any
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.runtime import chaos
+from repro.runtime.ft import SupervisedExecutor
 from repro.serve.batcher import DynamicBatcher, Request
+from repro.serve.breaker import BreakerBoard
 from repro.serve.errors import DeadlineExceeded, Overloaded, ServiceClosed
 from repro.serve.metrics import MetricsRegistry
-from repro.sort import SortSpec, bucket_key, sort_batched
+from repro.sort import (SortSpec, bucket_key, gather_perm_checked,
+                        sort_batched)
+from repro.sort import argsort as sort_argsort
 from repro.sort import driver as sort_driver
+from repro.sort import sort as sort_single
 
 KINDS = ("sort", "argsort", "sort_kv")
 
@@ -73,6 +91,20 @@ class ServiceConfig:
     latency_window   per-bucket latency reservoir size (p50/p99 basis).
     straggler_threshold  batch-time EWMA multiplier that flags a straggler
                      (repro.runtime.ft.StepTimer).
+    straggler_warmup  StepTimer warmup: the EWMA is seeded from the median
+                     of the first k batch times, so the cold-compile first
+                     batch cannot poison the straggler baseline.
+    max_batch_retries  failed-batch retry budget (exponential backoff);
+                     past it the batch bisects to isolate a poison request.
+    retry_backoff_s  base backoff between batch retries (doubles per try).
+    breaker_threshold / breaker_cooldown_s  per-bucket circuit breaker:
+                     consecutive top-level batch failures that trip it, and
+                     how long it stays open before a half-open probe.
+    fallback_kernel_policy  kernel_policy for the degraded per-request
+                     path (None = keep the request's own policy). "xla"
+                     sidesteps a suspected kernel miscompile; results stay
+                     bit-identical by the dispatch-layer parity contract.
+    executor_max_restarts  SupervisedExecutor restart budget.
     """
     max_batch: int = 8
     max_delay_ms: float = 5.0
@@ -82,6 +114,13 @@ class ServiceConfig:
     default_timeout_s: float | None = None
     latency_window: int = 2048
     straggler_threshold: float = 3.0
+    straggler_warmup: int = 3
+    max_batch_retries: int = 2
+    retry_backoff_s: float = 0.05
+    breaker_threshold: int = 3
+    breaker_cooldown_s: float = 30.0
+    fallback_kernel_policy: str | None = "xla"
+    executor_max_restarts: int = 8
 
 
 def _pad_pow2(b: int, cap: int) -> int:
@@ -98,19 +137,26 @@ class SortService:
                  config: ServiceConfig | None = None):
         self.spec = spec if spec is not None else SortSpec()
         self.config = config or ServiceConfig()
+        self._breakers = BreakerBoard(
+            threshold=self.config.breaker_threshold,
+            cooldown_s=self.config.breaker_cooldown_s)
         self.metrics = MetricsRegistry(
             window=self.config.latency_window,
             straggler_threshold=self.config.straggler_threshold,
-            cache_stats=sort_driver.exec_cache.stats)
+            straggler_warmup=self.config.straggler_warmup,
+            cache_stats=sort_driver.exec_cache.stats,
+            health=self.health)
         self._batcher = DynamicBatcher(
             max_batch=self.config.max_batch,
             max_delay_s=self.config.max_delay_ms / 1e3,
             flush_cb=self._on_flush)
         # one dispatch thread: jax dispatch against one host mesh is
         # serial anyway, and a single worker makes the per-batch
-        # exec-cache delta attribution exact
-        self._executor = ThreadPoolExecutor(
-            max_workers=1, thread_name_prefix="sort-serve-dispatch")
+        # exec-cache delta attribution exact; the supervisor rebuilds it
+        # if a batch poisons the worker (DESIGN.md Section 8)
+        self._executor = SupervisedExecutor(
+            max_restarts=self.config.executor_max_restarts,
+            thread_name_prefix="sort-serve-dispatch")
         self._sem: asyncio.Semaphore | None = None
         self._loop: asyncio.AbstractEventLoop | None = None
         self._queued = 0        # admitted, not yet handed to the executor
@@ -225,10 +271,7 @@ class SortService:
             queue_waits = [now - r.t_submit for r in live]
             t0 = time.monotonic()
             try:
-                results, cache_delta = await self._loop.run_in_executor(
-                    self._executor, self._run_batch, live)
-            except Exception as e:   # whole-batch failure (bad spec, OOM)
-                results, cache_delta = [e] * len(live), None
+                results, cache_delta = await self._execute(key, live)
             finally:
                 self._in_flight -= 1
             self.metrics.observe_batch(
@@ -242,6 +285,112 @@ class SortService:
                     ok=not isinstance(res, BaseException))
                 self._resolve(r, res)
 
+    async def _execute(self, key, reqs, *, top: bool = True):
+        """Self-healing batch execution (DESIGN.md Section 8).
+
+        Top level: the bucket's circuit breaker gates entry (open =>
+        degraded per-request path), a failed launch retries with
+        exponential backoff, and exactly one success/failure event is
+        recorded on the breaker per flushed batch. Retries exhausted, the
+        batch bisects (`top=False`: single attempt, no breaker events) so
+        a poison request fails alone. Returns (results, cache_delta) —
+        exceptions as per-request values, never raised."""
+        br = self._breakers.breaker(key)
+        if top and not br.allow():
+            return await self._execute_degraded(key, reqs), None
+        attempts = (self.config.max_batch_retries + 1) if top else 1
+        last_exc: BaseException | None = None
+        for attempt in range(attempts):
+            if attempt:
+                self.metrics.observe_batch_retry(key)
+                await asyncio.sleep(
+                    self.config.retry_backoff_s * (2 ** (attempt - 1)))
+            try:
+                results, delta = await self._loop.run_in_executor(
+                    self._executor, self._run_batch, reqs)
+                if top:
+                    br.record_success()
+                return results, delta
+            except chaos.ExecutorDeath as e:
+                # the worker itself is poisoned — restart the pool; the
+                # retry loop (or bisection below) re-runs the batch
+                try:
+                    self._executor.report_death()
+                    self.metrics.observe_executor_restart()
+                except RuntimeError as budget:
+                    last_exc = budget
+                    break
+                last_exc = RuntimeError(f"executor died mid-batch: {e}")
+            except asyncio.CancelledError:
+                # our pending launch was cancelled by a pool restart
+                # (cancel_futures=True) — transient, retryable
+                last_exc = RuntimeError("batch cancelled by executor restart")
+            except Exception as e:
+                last_exc = e
+        if len(reqs) > 1:
+            # bisection isolation: halves run independently (single
+            # attempt each), recursing until the poison request is alone
+            self.metrics.observe_bisection(key)
+            mid = len(reqs) // 2
+            left, dl = await self._execute(key, reqs[:mid], top=False)
+            right, dr = await self._execute(key, reqs[mid:], top=False)
+            delta = None
+            if dl or dr:
+                delta = {k: (dl or {}).get(k, 0) + (dr or {}).get(k, 0)
+                         for k in ("hits", "misses", "evictions")}
+            if top:
+                br.record_failure()   # the batched path DID fail
+            return left + right, delta
+        if top:
+            br.record_failure()
+        return [last_exc] * len(reqs), None
+
+    async def _execute_degraded(self, key, reqs):
+        """Open-breaker path: serve each request alone through the
+        unbatched front door under `fallback_kernel_policy`. Slower, but
+        sidesteps the suspected-broken batched executable — and feeds the
+        breaker board the degraded-path health that distinguishes
+        "degraded" from "tripped"."""
+        results = []
+        for r in reqs:
+            try:
+                res = await self._loop.run_in_executor(
+                    self._executor, self._run_one, r)
+                ok = True
+            except chaos.ExecutorDeath as e:
+                try:
+                    self._executor.report_death()
+                    self.metrics.observe_executor_restart()
+                except RuntimeError:
+                    pass
+                res, ok = RuntimeError(f"executor died: {e}"), False
+            except asyncio.CancelledError:
+                res = RuntimeError("request cancelled by executor restart")
+                ok = False
+            except Exception as e:
+                res, ok = e, False
+            self.metrics.observe_degraded(key, ok=ok)
+            self._breakers.record_degraded(key, ok)
+            results.append(res)
+        return results
+
+    def _run_one(self, req: Request):
+        """Executor thread: one request through the unbatched front door
+        (the degraded path). Bit-identical to the batched result by the
+        engine's batching and kernel-policy parity contracts."""
+        chaos.on_dispatch(req.x)
+        spec = req.spec
+        fkp = self.config.fallback_kernel_policy
+        if fkp is not None and spec.kernel_policy != fkp:
+            spec = dataclasses.replace(spec, kernel_policy=fkp)
+        x = jnp.asarray(req.x)
+        if req.kind == "sort":
+            return sort_single(x, spec).gather()
+        order = np.asarray(sort_argsort(x, spec))
+        if req.kind == "argsort":
+            return order
+        return sort_single(x, spec).gather(), req.values[order]
+
     def _run_batch(self, reqs):
         """Executor thread: one `sort_batched` launch for the batch.
 
@@ -252,6 +401,7 @@ class SortService:
         spec, kind = reqs[0].spec, reqs[0].kind
         b_real = len(reqs)
         xs = np.stack([r.x for r in reqs])
+        chaos.on_dispatch(xs)   # fault-injection hook (no-op in prod)
         if self.config.pad_batches:
             b_pad = _pad_pow2(b_real, self.config.max_batch)
             if b_pad > b_real:   # repeat the last row; rows are independent
@@ -259,26 +409,38 @@ class SortService:
                     [xs, np.broadcast_to(xs[-1], (b_pad - b_real,) + xs[-1].shape)])
         stats0 = sort_driver.exec_cache.stats()
         out = sort_batched(jnp.asarray(xs), spec)
+        self.metrics.observe_recovery(
+            reqs[0].key, getattr(out, "recovery", None))
         results = []
         for b in range(b_real):
             r = out.request(b)
             if kind == "sort":
                 results.append(r.gather())
                 continue
-            if int(np.asarray(r.overflow)) != 0:
-                results.append(RuntimeError(
-                    f"{kind}: exchange dropped keys (overflow="
-                    f"{int(np.asarray(r.overflow))}); raise pair_factor/"
-                    "out_slack or use exchange='allgather'"))
-            elif kind == "argsort":
-                results.append(r.gather_indices())
+            # exactness from the gathered LENGTH — no device sync on the
+            # happy path (see repro.sort.gather_perm_checked)
+            try:
+                order = gather_perm_checked(r, kind)
+            except RuntimeError as e:
+                results.append(e)
+                continue
+            if kind == "argsort":
+                results.append(order)
             else:   # sort_kv
-                order = r.gather_indices()
                 results.append((r.gather(), reqs[b].values[order]))
         stats1 = sort_driver.exec_cache.stats()
         delta = {k: stats1[k] - stats0[k]
                  for k in ("hits", "misses", "evictions")}
         return results, delta
+
+    # -- health ------------------------------------------------------------
+
+    def health(self) -> dict:
+        """Breaker-board health (ok | degraded | tripped) + per-bucket
+        breaker states + executor restart counters — the /healthz body."""
+        snap = self._breakers.full_snapshot()
+        snap["executor"] = self._executor.snapshot()
+        return snap
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -350,6 +512,9 @@ class ServiceRunner:
 
     def metrics(self) -> dict:
         return self.service.metrics.snapshot()
+
+    def health(self) -> dict:
+        return self.service.health()
 
     def reset_metrics(self) -> None:
         self.service.metrics.reset()

@@ -1,19 +1,34 @@
 """End-to-end serving smoke: the CI gate for the sort service.
 
-    PYTHONPATH=src python -m repro.serve.smoke
+    PYTHONPATH=src python -m repro.serve.smoke            # steady state
+    PYTHONPATH=src python -m repro.serve.smoke --chaos    # fault drill
 
-Starts the HTTP front end in-process (8 simulated host devices), warms
-every (bucket, padded-batch-size) executable, resets the metrics, then
-fires 64 concurrent mixed-shape requests and asserts:
+Steady-state mode starts the HTTP front end in-process (8 simulated host
+devices), warms every (bucket, padded-batch-size) executable, resets the
+metrics, then fires 64 concurrent mixed-shape requests and asserts:
 
   * every response is exactly the NumPy sort of its input (bit-identity
     through the whole batch/HTTP path);
   * the executable-cache hit rate over the measured window is > 0.9
     (the steady-state serving contract, ISSUE 6 acceptance);
   * admission control rejects cleanly (HTTP 429) past the queue limit.
+
+Chaos mode (`--chaos`, DESIGN.md Section 8) runs the same service under
+an armed `repro.runtime.chaos.FaultPlan` — the dense exchange capacity
+clamped to force real overflow on every batch, one injected dispatch
+crash, one injected executor death, and a poison request — and asserts
+the self-healing contract:
+
+  * every non-poison response is still bit-exact (overflow recovered by
+    `on_overflow="retry"`, crashes by batch retry, the dead executor by
+    supervisor restart, the poison batchmates by bisection);
+  * the poison request alone fails (HTTP 500 naming the injected fault);
+  * after the plan disarms, the service serves clean traffic and
+    `GET /healthz` reports `health == "ok"`.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -55,6 +70,108 @@ def _warm_executables(spec, rng, *, max_batch: int) -> None:
                            for _ in range(b)])
             sort_batched(jnp.asarray(xs), spec)
             b *= 2
+
+
+def _get(base: str, route: str):
+    try:
+        with urllib.request.urlopen(base + route, timeout=30) as resp:
+            return resp.status, json.loads(resp.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read() or b"{}")
+
+
+def chaos_main() -> int:
+    """The fault drill: overflow clamp + crash + death + poison, live."""
+    from repro.runtime import chaos
+    from repro.serve.http import make_server
+    from repro.serve.service import ServiceConfig, ServiceRunner
+    from repro.sort import SortSpec
+
+    n = 8 * 64
+    rng = np.random.default_rng(0)
+    spec = SortSpec(exchange="dense", on_overflow="retry", tag=False)
+    config = ServiceConfig(max_batch=4, max_delay_ms=150.0,
+                           max_queue_depth=256, max_in_flight=2)
+
+    def fresh(poison: bool = False) -> np.ndarray:
+        x = rng.permutation(4 * n)[:n].astype(np.int32)
+        if poison:
+            x[0] = -7   # inputs are non-negative, so -7 is the poison key
+        return x
+
+    with ServiceRunner(spec=spec, config=config) as runner:
+        server = make_server(runner, port=0)
+        base = f"http://{server.server_address[0]}:{server.server_address[1]}"
+        threading.Thread(target=server.serve_forever, daemon=True).start()
+        try:
+            plan = chaos.FaultPlan(clamp_pair_cap=8, crash_at=(1,),
+                                   die_at=(2,), poison_key=-7)
+            with chaos.activate(plan):
+                # wave A: clean load under clamp + crash + death — every
+                # batch overflows (retry escalation), dispatch 1 crashes
+                # (batch retry), dispatch 2 dies (supervisor restart)
+                inputs = [fresh() for _ in range(12)]
+
+                def one(x):
+                    status, body = _post(
+                        base, "/v1/sort",
+                        {"keys": x.tolist(), "dtype": "int32"})
+                    return status, body
+
+                with ThreadPoolExecutor(8) as pool:
+                    out = list(pool.map(one, inputs))
+                for x, (status, body) in zip(inputs, out):
+                    assert status == 200, body
+                    np.testing.assert_array_equal(
+                        np.asarray(body["sorted"], np.int32), np.sort(x))
+
+                # wave B: a poison request among three clean batchmates —
+                # bisection must isolate it
+                wave = [fresh(poison=(i == 1)) for i in range(4)]
+                with ThreadPoolExecutor(4) as pool:
+                    out = list(pool.map(one, wave))
+                for i, (x, (status, body)) in enumerate(zip(wave, out)):
+                    if i == 1:
+                        assert status == 500, (status, body)
+                        assert "poison" in body["error"], body
+                    else:
+                        assert status == 200, body
+                        np.testing.assert_array_equal(
+                            np.asarray(body["sorted"], np.int32), np.sort(x))
+                fired = chaos.stats()
+            print(f"chaos fired: {fired}")
+            assert fired["crash"] >= 1 and fired["death"] >= 1, fired
+            assert fired["poison"] >= 1, fired
+
+            # plan disarmed: clean traffic must serve and health must be ok
+            for _ in range(4):
+                x = fresh()
+                status, body = one(x)
+                assert status == 200, body
+                np.testing.assert_array_equal(
+                    np.asarray(body["sorted"], np.int32), np.sort(x))
+            status, health = _get(base, "/healthz")
+            assert status == 200 and health["health"] == "ok", health
+
+            _, m = _get(base, "/metrics")
+            print(f"served={m['served']} errors={m['errors']} "
+                  f"batch_retries={m['batch_retries']} "
+                  f"bisections={m['bisections']} "
+                  f"executor_restarts={m['executor_restarts']} "
+                  f"overflow_retries={m['overflow_retries']} "
+                  f"overflow_recovered={m['overflow_recovered']} "
+                  f"health={m['health']['health']}")
+            assert m["served"] == 12 + 3 + 4, m["served"]
+            assert m["errors"] == 1, m["errors"]          # the poison only
+            assert m["batch_retries"] >= 1, m
+            assert m["bisections"] >= 1, m
+            assert m["executor_restarts"] >= 1, m
+            assert m["overflow_retries"] >= 1, m
+            assert m["overflow_recovered"] > 0, m
+        finally:
+            server.shutdown()
+    print("serve chaos smoke: OK")
+    return 0
 
 
 def main() -> int:
@@ -130,4 +247,9 @@ def main() -> int:
 
 
 if __name__ == "__main__":
-    sys.exit(main())
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the fault-injection drill instead of the "
+                         "steady-state smoke")
+    cli = ap.parse_args()
+    sys.exit(chaos_main() if cli.chaos else main())

@@ -26,18 +26,18 @@ as thin shims over the same driver.
 """
 from repro.sort.adapters import BatchedSortOutput, SortOutput
 from repro.sort.api import (
-    argsort, bucket_key, gather, sort, sort_batched, sort_kv,
-    spec_fingerprint)
+    RecoveryStats, argsort, bucket_key, gather, gather_perm_checked, sort,
+    sort_batched, sort_kv, spec_fingerprint)
 from repro.sort.driver import exec_cache
 from repro.sort.partitioners import (
     Partitioner, ShardCtx, available_algorithms, get_partitioner,
     register_partitioner)
-from repro.sort.spec import ALGORITHMS, SortSpec
+from repro.sort.spec import ALGORITHMS, ON_OVERFLOW, SortSpec
 
 __all__ = [
-    "ALGORITHMS", "BatchedSortOutput", "Partitioner", "ShardCtx",
-    "SortOutput", "SortSpec", "argsort", "available_algorithms",
-    "bucket_key", "exec_cache", "gather", "get_partitioner",
-    "register_partitioner", "sort", "sort_batched", "sort_kv",
-    "spec_fingerprint",
+    "ALGORITHMS", "BatchedSortOutput", "ON_OVERFLOW", "Partitioner",
+    "RecoveryStats", "ShardCtx", "SortOutput", "SortSpec", "argsort",
+    "available_algorithms", "bucket_key", "exec_cache", "gather",
+    "gather_perm_checked", "get_partitioner", "register_partitioner",
+    "sort", "sort_batched", "sort_kv", "spec_fingerprint",
 ]

@@ -50,8 +50,12 @@ class SortOutput:
     overflow dropped-key count (0 => exact, the contract callers check).
     splitter_keys / splitter_ranks / stats  diagnostics from the
              partitioner (splitter keys decoded back to the key domain).
+    recovery overflow-recovery stats (repro.sort.RecoveryStats) attached
+             by the `on_overflow="retry"` policy; None otherwise.
     n        number of real input keys.
     """
+
+    recovery = None
 
     def __init__(self, shards, counts, indices, overflow, splitter_keys,
                  splitter_ranks, stats, n):
@@ -86,8 +90,12 @@ class BatchedSortOutput:
     shards (B, p, cap), counts (B, p), indices (B, p, cap) | None,
     overflow (B,), splitter_keys/splitter_ranks (B, p-1), stats batched
     per-request (SplitterStats rows of shape (k, B)), n = per-request real
-    key count. `request(b)` views one request as a regular SortOutput.
+    key count. `request(b)` views one request as a regular SortOutput;
+    `recovery` (batch-level overflow-recovery stats, see SortOutput) is
+    carried onto every view.
     """
+
+    recovery = None
 
     def __init__(self, shards, counts, indices, overflow, splitter_keys,
                  splitter_ranks, stats, n):
@@ -106,11 +114,13 @@ class BatchedSortOutput:
 
     def request(self, b: int) -> SortOutput:
         """Request b's result as a SortOutput view (stats stay batched)."""
-        return SortOutput(
+        out = SortOutput(
             self.shards[b], self.counts[b],
             None if self.indices is None else self.indices[b],
             self.overflow[b], self.splitter_keys[b], self.splitter_ranks[b],
             self.stats, self.n)
+        out.recovery = self.recovery
+        return out
 
     def gather(self, b: int) -> np.ndarray:
         """Request b's keys, globally sorted, as one (n,) NumPy array."""

@@ -23,10 +23,32 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import dispatch
+from repro.runtime import chaos
 from repro.sort import driver
 from repro.sort.adapters import BatchedSortOutput, SortOutput, make_plan
 from repro.sort.partitioners import ShardCtx, get_partitioner
 from repro.sort.spec import SortSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryStats:
+    """How an `on_overflow="retry"` sort resolved (attached to the returned
+    output as `.recovery`; None under other policies).
+
+    policy            the on_overflow policy that ran ("retry").
+    attempts          total launches, 1 = first launch was already exact.
+    escalations       capacity_scale of each re-launch, in order.
+    spill_fallback    True when the final attempt used the spill channel.
+    recovered_overflow  the overflow count of the first (failed) launch —
+                      how many keys would have been dropped without the
+                      policy.
+    """
+
+    policy: str
+    attempts: int
+    escalations: tuple
+    spill_fallback: bool
+    recovered_overflow: int
 
 
 def _as_spec(spec, overrides) -> SortSpec:
@@ -54,10 +76,14 @@ def _mesh_fingerprint(spec: SortSpec):
 def _spec_trace_fields(spec: SortSpec) -> tuple:
     """The SortSpec fields that shape the traced program (everything else
     is either a runtime argument, like the seed, or captured through the
-    encoded array's shape/dtype)."""
+    encoded array's shape/dtype). The chaos trace token rides along: an
+    active fault plan that clamps exchange capacities changes the trace,
+    and a clamped executable must never be served from — or poison — the
+    unclamped cache line (repro.runtime.chaos)."""
     return (spec.algorithm, spec.eps, spec.rounds, spec.sample_per_shard,
-            spec.adaptive, spec.total_sample, spec.s, spec.exchange,
-            spec.pair_factor, spec.out_slack, spec.kernel_policy)
+            spec.adaptive, spec.total_sample, spec.s,
+            spec.resolved_exchange(), spec.pair_factor, spec.out_slack,
+            spec.capacity_scale, spec.kernel_policy, chaos.trace_token())
 
 
 def spec_fingerprint(spec: SortSpec):
@@ -130,15 +156,14 @@ def _sort_batched_impl(xs, spec: SortSpec,
     if xs.ndim != 2:
         raise ValueError(
             f"sort_batched expects a (B, n) key array, got shape {xs.shape}")
-    if spec.initial_probes is not None:
-        raise NotImplementedError(
-            "warm-start probes are not supported on the batched path")
     p, names, sizes = _mesh_axes(spec, part)
 
     plan = make_plan(xs, spec, p, want_indices=want_indices)
     enc = plan.encode(xs)
+    probes = (plan.encode_probes(spec.initial_probes)
+              if spec.initial_probes is not None else None)
     ctx = ShardCtx(spec=spec, axis_names=names, sizes=sizes, rng=None,
-                   initial_probes=None)
+                   initial_probes=probes)
     p1_sort = (jax.vmap(spec.local_sort_fn) if spec.local_sort_fn is not None
                else dispatch.local_sort_batched_fn(spec.kernel_policy))
     raw = driver.run_batched(
@@ -160,24 +185,95 @@ def _sort_batched_buckets(arrs, spec: SortSpec) -> list:
                 f"sort_batched list entries must be 1-D, got shape {a.shape}")
     results = [None] * len(arrs)
     for _, idxs in group_by_length(arrs).items():
-        out = _sort_batched_impl(jnp.stack([arrs[i] for i in idxs]), spec,
-                                 want_indices=False)
+        stacked = jnp.stack([arrs[i] for i in idxs])
+        out = _with_overflow_policy(
+            lambda s, xs=stacked: _sort_batched_impl(xs, s,
+                                                     want_indices=False),
+            spec)
         for j, i in enumerate(idxs):
             results[i] = out.request(j)
     return results
+
+
+def _host_overflow(out) -> int:
+    """Materialize the overflow counter — the retry policy's one
+    deliberate host sync per launch (max over the batch on the batched
+    path, where `overflow` is (B,))."""
+    return int(np.max(np.asarray(out.overflow)))
+
+
+def _warm_started(spec: SortSpec, out) -> SortSpec:
+    """Feed a failed attempt's converged splitters back in as warm-start
+    probes, so the retry re-ranks p-1 known-good keys instead of sampling
+    from scratch (the ChaNGa trick pointed at recovery). HSS only — it is
+    the one partitioner that consumes probes."""
+    if spec.algorithm != "hss":
+        return spec
+    sk = out.splitter_keys
+    if sk is None or getattr(sk, "size", 0) == 0:
+        return spec
+    return dataclasses.replace(spec, initial_probes=sk)
+
+
+def _with_overflow_policy(run, spec: SortSpec):
+    """Execute `run(spec)` under the spec's overflow policy (DESIGN.md
+    Section 8).
+
+    "raise" and "spill" are trace-time-only policies: no counter is ever
+    materialized here (spill swapped the exchange for the exact channel in
+    `spec.exchange_config()`; raise leaves detection to the caller / the
+    permutation front-doors' gathered-length check). "retry" materializes
+    the counter once per launch and, while nonzero, re-runs with doubled
+    `capacity_scale` and warm-started splitters; the final fallback
+    attempt runs on the spill channel, so bounded escalation still ends
+    exact unless even the (1+eps)-sized receive buffer truncates."""
+    out = run(spec)
+    if spec.on_overflow != "retry":
+        return out
+    ovf0 = _host_overflow(out)
+    if ovf0 == 0:
+        out.recovery = RecoveryStats("retry", 1, (), False, 0)
+        return out
+    esc = []
+    for k in range(1, spec.max_overflow_retries + 1):
+        scale = spec.capacity_scale * (2.0 ** k)
+        esc.append(scale)
+        out = run(dataclasses.replace(_warm_started(spec, out),
+                                      capacity_scale=scale))
+        if _host_overflow(out) == 0:
+            out.recovery = RecoveryStats("retry", 1 + len(esc), tuple(esc),
+                                         False, ovf0)
+            return out
+    fspec = dataclasses.replace(
+        _warm_started(spec, out), on_overflow="spill",
+        capacity_scale=esc[-1] if esc else spec.capacity_scale)
+    out = run(fspec)
+    left = _host_overflow(out)
+    out.recovery = RecoveryStats("retry", 2 + len(esc), tuple(esc), True,
+                                 ovf0)
+    if left != 0:
+        raise RuntimeError(
+            f"sort overflow unrecovered after {len(esc)} capacity "
+            f"escalations and a spill-channel fallback ({left} keys "
+            "truncated at out_cap) — the splitting violated its eps "
+            "guarantee; raise out_slack or eps")
+    return out
 
 
 def sort(x, spec: SortSpec | None = None, **overrides) -> SortOutput:
     """Sort a 1-D array of keys across the mesh. Returns a SortOutput whose
     `shards`/`counts` are the distributed result and `.gather()` the flat
     sorted array. Float keys and duplicate-heavy keys are handled by the
-    adapter layer automatically; see SortSpec for every knob. With
-    `SortSpec(batch=True)` a (B, n) array routes through the batched
-    single-launch engine (see `sort_batched`)."""
+    adapter layer automatically; see SortSpec for every knob — including
+    `on_overflow`, the capacity-overflow recovery policy (raise | retry |
+    spill; DESIGN.md Section 8). With `SortSpec(batch=True)` a (B, n)
+    array routes through the batched single-launch engine (see
+    `sort_batched`)."""
     spec = _as_spec(spec, overrides)
     if spec.batch:
         return sort_batched(x, spec)
-    return _sort_impl(x, spec, want_indices=False)
+    return _with_overflow_policy(
+        lambda s: _sort_impl(x, s, want_indices=False), spec)
 
 
 def sort_batched(xs, spec: SortSpec | None = None, **overrides):
@@ -199,28 +295,38 @@ def sort_batched(xs, spec: SortSpec | None = None, **overrides):
     spec = _as_spec(spec, overrides)
     if isinstance(xs, (list, tuple)):
         return _sort_batched_buckets(xs, spec)
-    return _sort_batched_impl(jnp.asarray(xs), spec, want_indices=False)
+    return _with_overflow_policy(
+        lambda s: _sort_batched_impl(jnp.asarray(xs), s, want_indices=False),
+        spec)
 
 
-def _exact_or_raise(out: "SortOutput", what: str) -> "SortOutput":
-    """argsort/sort_kv return flat permutations, so dropped keys can't be
-    signalled through a counter the way sort() does — fail loudly instead."""
-    if int(np.asarray(out.overflow)) != 0:
+def gather_perm_checked(out: "SortOutput", what: str) -> np.ndarray:
+    """argsort/sort_kv exactness check, without a device sync: a truncated
+    permutation is silent corruption, but dropped keys are exactly the
+    keys missing from the gather — so verify the gathered LENGTH (counts
+    are materialized by the gather anyway) instead of blocking on the
+    device-side overflow counter. Strictly more precise, too: the counter
+    also counts harmless sample-buffer overflow, which drops no keys."""
+    order = out.gather_indices()
+    if order.shape[0] != out.n:
         raise RuntimeError(
-            f"{what}: exchange dropped {int(np.asarray(out.overflow))} keys "
+            f"{what}: exchange dropped {out.n - order.shape[0]} keys "
             "(capacity overflow) — the result would not be a permutation. "
-            "Raise pair_factor/out_slack or use exchange='allgather'.")
-    return out
+            "Use on_overflow='retry'/'spill', raise pair_factor/out_slack, "
+            "or use exchange='allgather'.")
+    return order
 
 
 def argsort(x, spec: SortSpec | None = None, **overrides) -> np.ndarray:
     """Stable distributed argsort: the permutation that sorts x, as a flat
     (n,) NumPy array. Implemented via implicit tagging — the per-key tag IS
     the original index, so the permutation falls out of the sorted keys.
-    Raises if the exchange overflowed (the result must be exact)."""
+    Raises if the exchange dropped keys (the result must be exact);
+    `on_overflow="retry"`/"spill" recover instead of raising."""
     spec = dataclasses.replace(_as_spec(spec, overrides), stable=True)
-    out = _exact_or_raise(_sort_impl(x, spec, want_indices=True), "argsort")
-    return out.gather_indices()
+    out = _with_overflow_policy(
+        lambda s: _sort_impl(x, s, want_indices=True), spec)
+    return gather_perm_checked(out, "argsort")
 
 
 def sort_kv(keys, values, spec: SortSpec | None = None, **overrides):
@@ -233,8 +339,9 @@ def sort_kv(keys, values, spec: SortSpec | None = None, **overrides):
         raise ValueError(f"values leading dim {values.shape[:1]} != "
                          f"keys shape {keys.shape}")
     spec = dataclasses.replace(_as_spec(spec, overrides), stable=True)
-    out = _exact_or_raise(_sort_impl(keys, spec, want_indices=True), "sort_kv")
-    order = out.gather_indices()
+    out = _with_overflow_policy(
+        lambda s: _sort_impl(keys, s, want_indices=True), spec)
+    order = gather_perm_checked(out, "sort_kv")
     return out.gather(), values[order]
 
 

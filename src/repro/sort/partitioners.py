@@ -190,12 +190,9 @@ class HSSPartitioner(Partitioner):
         return keys, ranks, jnp.zeros((), jnp.int32), stats
 
     def splitters_batched(self, local_sorted, ctx):
-        if ctx.initial_probes is not None:
-            raise NotImplementedError(
-                "warm-start probes are not supported on the batched path")
         keys, ranks, stats = hss_splitters_batched(
             local_sorted, axis_name=ctx.axis_name, p=ctx.p, cfg=ctx.hss_cfg,
-            rng=ctx.rng)
+            rng=ctx.rng, initial_probes=ctx.initial_probes)
         return (keys, ranks,
                 jnp.zeros((local_sorted.shape[0],), jnp.int32), stats)
 

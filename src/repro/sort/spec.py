@@ -19,6 +19,8 @@ from repro.core.exchange import ExchangeConfig
 
 ALGORITHMS = ("hss", "sample_random", "sample_regular", "ams", "multistage")
 
+ON_OVERFLOW = ("raise", "retry", "spill")
+
 
 @dataclasses.dataclass(frozen=True)
 class SortSpec:
@@ -34,9 +36,34 @@ class SortSpec:
       s              sample_regular (PSRS): per-shard sample size override.
 
     Exchange (see ExchangeConfig):
-      exchange       "dense" | "ragged" | "allgather".
+      exchange       "dense" | "dense_spill" | "ragged" | "allgather".
       pair_factor    dense: per-(src,dst) capacity multiplier.
       out_slack      output-buffer slack on the (1+eps) capacity.
+
+    Overflow policy (DESIGN.md Section 8):
+      on_overflow    what happens when an exchange capacity would drop keys.
+                     "raise": current/default behavior — `sort()` surfaces
+                     the device-side overflow counter for the caller to
+                     check; `argsort`/`sort_kv` materialize it (one host
+                     sync) and raise, because a truncated permutation is
+                     silent corruption. "retry": the overflow counter is
+                     materialized once per launch and, when nonzero, the
+                     sort re-runs with `capacity_scale` doubled per attempt
+                     (pair caps, out caps, AND sample caps — every static
+                     buffer) and splitters warm-started from the failed
+                     attempt's converged state; after `max_overflow_retries`
+                     escalations a final attempt runs on the spill channel,
+                     and only if even that truncates does it raise. "spill":
+                     a trace-time swap of the dense exchange for the
+                     dense_spill channel (exact for send-side overflow) —
+                     nothing to check at runtime, so the happy path does
+                     ZERO host syncs even for argsort (exactness is
+                     verified from the gathered length, which is
+                     materialized anyway).
+      max_overflow_retries  bounded escalation attempts for "retry".
+      capacity_scale uniform static-buffer multiplier (pair/out/sample
+                     caps). Callers normally leave this at 1.0; the retry
+                     policy sweeps it 2, 4, 8, ... internally.
 
     Placement:
       mesh           jax Mesh to sort over (None => 1-D mesh over all devices).
@@ -92,6 +119,10 @@ class SortSpec:
     exchange: str = "dense"
     pair_factor: float = 3.0
     out_slack: float = 1.0
+    # overflow policy
+    on_overflow: str = "raise"
+    max_overflow_retries: int = 3
+    capacity_scale: float = 1.0
     # placement
     mesh: Any = None
     axis_name: str = "sort"
@@ -107,14 +138,41 @@ class SortSpec:
     initial_probes: Any = None
     local_sort_fn: Any = None
 
+    def __post_init__(self):
+        if self.on_overflow not in ON_OVERFLOW:
+            raise ValueError(
+                f"on_overflow must be one of {ON_OVERFLOW}, "
+                f"got {self.on_overflow!r}")
+
+    def resolved_exchange(self) -> str:
+        """The exchange strategy after the overflow policy is applied:
+        "spill" swaps the capacity-dropping dense channel for the exact
+        dense_spill channel at trace time (the already-exact ragged and
+        allgather strategies are left alone)."""
+        if self.on_overflow == "spill" and self.exchange == "dense":
+            return "dense_spill"
+        return self.exchange
+
+    def overflow_structurally_zero(self) -> bool:
+        """True when the traced program cannot drop keys on the send side
+        and the (1+eps) guarantee sizes the receive buffers — i.e. the
+        overflow counter needs no host-blocking check on the happy path.
+        dense_spill can still truncate at out_cap under a violated eps
+        guarantee; permutation front-doors re-verify from the gathered
+        length (already host-side) instead of syncing the counter."""
+        return self.resolved_exchange() in ("ragged", "dense_spill",
+                                            "allgather")
+
     def hss_config(self) -> HSSConfig:
         return HSSConfig(eps=self.eps, rounds=self.rounds,
                          sample_per_shard=self.sample_per_shard,
                          adaptive=self.adaptive, out_slack=self.out_slack,
+                         capacity_scale=self.capacity_scale,
                          kernel_policy=self.kernel_policy)
 
     def exchange_config(self) -> ExchangeConfig:
-        return ExchangeConfig(strategy=self.exchange,
+        return ExchangeConfig(strategy=self.resolved_exchange(),
                               pair_factor=self.pair_factor,
                               out_slack=self.out_slack,
+                              capacity_scale=self.capacity_scale,
                               kernel_policy=self.kernel_policy)

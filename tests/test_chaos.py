@@ -1,0 +1,332 @@
+"""Fault-injection recovery suite (DESIGN.md Section 8).
+
+Every test arms a deterministic `repro.runtime.chaos.FaultPlan` (or drives
+the self-healing primitives directly) and asserts the recovery contract:
+faulted runs end bit-identical to unfaulted ones, poison requests fail
+alone, a dead dispatch executor is rebuilt, and the breaker board walks
+ok -> degraded -> ok.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.runtime import chaos
+from repro.runtime.chaos import ExecutorDeath, FaultPlan, InjectedFault
+from repro.runtime.ft import StepTimer, SupervisedExecutor
+from repro.serve.breaker import BreakerBoard, CircuitBreaker
+
+pytestmark = pytest.mark.chaos
+
+N = 8 * 64          # per-dest counts comfortably exceed the clamp floor
+CLAMP = 8
+
+
+def _keys(rng, n=N, poison=False):
+    x = rng.permutation(4 * n)[:n].astype(np.int32)
+    if poison:
+        x[0] = -7   # inputs are non-negative: -7 marks the poison request
+    return x
+
+
+def _gathered(out):
+    shards, counts = np.asarray(out.shards), np.asarray(out.counts)
+    return np.concatenate([shards[i, :counts[i]]
+                           for i in range(shards.shape[0])])
+
+
+# -- engine: overflow recovery under a clamped exchange ---------------------
+
+class TestOverflowRecovery:
+    def test_retry_is_bit_identical_under_clamp(self, rng):
+        from repro.sort import SortSpec, sort
+        x = _keys(rng)
+        ref = np.sort(x)
+        with chaos.activate(FaultPlan(clamp_pair_cap=CLAMP)):
+            out = sort(x, SortSpec(exchange="dense", on_overflow="retry"))
+            got = _gathered(out)
+        np.testing.assert_array_equal(got, ref)
+        assert out.recovery is not None
+        assert out.recovery.attempts > 1          # the clamp forced a retry
+        assert out.recovery.recovered_overflow > 0
+        assert not out.recovery.spill_fallback
+
+    def test_spill_is_bit_identical_under_clamp(self, rng):
+        from repro.sort import SortSpec, sort
+        x = _keys(rng)
+        with chaos.activate(FaultPlan(clamp_pair_cap=CLAMP)):
+            out = sort(x, SortSpec(exchange="dense", on_overflow="spill"))
+            got = _gathered(out)
+        np.testing.assert_array_equal(got, np.sort(x))
+
+    def test_dense_spill_matches_dense_unfaulted(self, rng):
+        from repro.sort import SortSpec, sort
+        x = _keys(rng)
+        a = _gathered(sort(x, SortSpec(exchange="dense")))
+        b = _gathered(sort(x, SortSpec(exchange="dense_spill")))
+        np.testing.assert_array_equal(a, b)
+
+    def test_retry_batched_bit_identical(self, rng):
+        from repro.sort import SortSpec, sort_batched
+        xs = np.stack([_keys(rng) for _ in range(2)])
+        with chaos.activate(FaultPlan(clamp_pair_cap=CLAMP)):
+            out = sort_batched(xs, SortSpec(exchange="dense",
+                                            on_overflow="retry"))
+            got = [_gathered(out.request(b)) for b in range(2)]
+        for b in range(2):
+            np.testing.assert_array_equal(got[b], np.sort(xs[b]))
+        assert out.recovery is not None and out.recovery.attempts > 1
+        assert out.request(0).recovery is out.recovery   # carried onto views
+
+    def test_argsort_raises_without_recovery_policy(self, rng):
+        from repro.sort import SortSpec, argsort
+        x = _keys(rng)
+        with chaos.activate(FaultPlan(clamp_pair_cap=CLAMP)):
+            with pytest.raises(RuntimeError, match="dropped"):
+                argsort(x, SortSpec(exchange="dense", on_overflow="raise"))
+
+    def test_argsort_recovers_with_retry(self, rng):
+        from repro.sort import SortSpec, argsort
+        x = _keys(rng)
+        with chaos.activate(FaultPlan(clamp_pair_cap=CLAMP)):
+            order = argsort(x, SortSpec(exchange="dense",
+                                        on_overflow="retry"))
+        np.testing.assert_array_equal(x[order], np.sort(x))
+
+    def test_clamped_trace_does_not_poison_cache(self, rng):
+        """A chaos-clamped executable must never serve the unclamped
+        spec: the clamp is folded into the cache key via trace_token."""
+        from repro.sort import SortSpec, sort_batched
+        xs = np.stack([_keys(rng) for _ in range(2)])
+        spec = SortSpec(exchange="dense")
+        with chaos.activate(FaultPlan(clamp_pair_cap=CLAMP)):
+            clamped = sort_batched(xs, spec)
+            dropped = xs.size - sum(
+                _gathered(clamped.request(b)).size for b in range(2))
+        assert dropped > 0     # the clamp really truncated
+        clean = sort_batched(xs, spec)
+        for b in range(2):
+            np.testing.assert_array_equal(_gathered(clean.request(b)),
+                                          np.sort(xs[b]))
+
+    def test_plans_do_not_nest(self):
+        with chaos.activate(FaultPlan(clamp_pair_cap=CLAMP)):
+            with pytest.raises(RuntimeError, match="already active"):
+                with chaos.activate(FaultPlan()):
+                    pass
+
+
+# -- chaos harness primitives ----------------------------------------------
+
+class TestFaultPlan:
+    def test_dispatch_indexed_faults(self):
+        plan = FaultPlan(crash_at=(1,), die_at=(2,), poison_key=-7,
+                         straggler_at=(0,), straggler_delay_s=0.01)
+        with chaos.activate(plan):
+            t0 = time.monotonic()
+            assert chaos.on_dispatch() == 0            # straggles, succeeds
+            assert time.monotonic() - t0 >= 0.01
+            with pytest.raises(InjectedFault):
+                chaos.on_dispatch()                    # crash_at 1
+            with pytest.raises(ExecutorDeath):
+                chaos.on_dispatch()                    # die_at 2
+            with pytest.raises(InjectedFault, match="poison"):
+                chaos.on_dispatch(np.array([3, -7, 5]))
+            assert chaos.on_dispatch(np.array([3, 5])) == 4
+            s = chaos.stats()
+        assert s["straggler"] == 1 and s["crash"] == 1
+        assert s["death"] == 1 and s["poison"] == 1
+        assert chaos.on_dispatch() == -1               # disarmed: no-op
+        assert chaos.stats() == {}
+
+
+# -- self-healing primitives -----------------------------------------------
+
+class TestStepTimer:
+    def test_default_matches_legacy_first_sample_seed(self):
+        t = StepTimer(alpha=0.5, threshold=2.0)
+        assert t.record(1.0) is False    # seeds the EWMA
+        assert t.ewma == 1.0
+        assert t.record(3.0) is True     # 3 > 2 * 1.0
+        assert t.stragglers == 1
+
+    def test_warmup_median_fixes_slow_first_step(self):
+        # legacy blind spot: a slow FIRST step (cold compile) becomes the
+        # baseline and hides every later straggler
+        legacy = StepTimer(threshold=3.0)
+        legacy.record(10.0)
+        assert legacy.record(1.0) is False and legacy.record(5.0) is False
+        fixed = StepTimer(threshold=3.0, warmup=3)
+        for dt in (10.0, 0.1, 0.1):      # median seed = 0.1, not 10.0
+            assert fixed.record(dt) is False
+        assert fixed.ewma == pytest.approx(0.1)
+        assert fixed.record(5.0) is True
+
+    def test_prior_seed_and_reset(self):
+        t = StepTimer(threshold=2.0, prior=1.0)
+        assert t.record(3.0) is True     # judged from the prior immediately
+        t.reset()
+        assert t.ewma == 1.0 and t.steps == 0
+
+
+class TestSupervisedExecutor:
+    def test_restart_after_death(self):
+        ex = SupervisedExecutor(max_restarts=2)
+        try:
+            assert ex.submit(lambda: 21 * 2).result() == 42
+            with pytest.raises(ExecutorDeath):
+                ex.submit(self._die).result()
+            assert ex.report_death() == 1
+            assert ex.submit(lambda: "alive").result() == "alive"
+            assert ex.snapshot()["restarts"] == 1
+        finally:
+            ex.shutdown()
+
+    def test_restart_budget_exhausts(self):
+        ex = SupervisedExecutor(max_restarts=1)
+        try:
+            ex.report_death()
+            with pytest.raises(RuntimeError, match="max_restarts"):
+                ex.report_death()
+        finally:
+            ex.shutdown()
+
+    @staticmethod
+    def _die():
+        raise ExecutorDeath("boom")
+
+
+class TestCircuitBreaker:
+    def test_trip_probe_and_recover(self):
+        clock = [0.0]
+        br = CircuitBreaker(threshold=2, cooldown_s=10.0,
+                            now=lambda: clock[0])
+        assert br.state == "closed" and br.allow()
+        br.record_failure()
+        assert br.state == "closed"
+        br.record_failure()
+        assert br.state == "open" and br.trips == 1
+        assert not br.allow()
+        clock[0] = 11.0
+        assert br.state == "half_open"
+        assert br.allow() and not br.allow()   # exactly one probe
+        br.record_failure()                    # failed probe: re-open
+        assert br.state == "open"
+        clock[0] = 22.0
+        assert br.allow()
+        br.record_success()
+        assert br.state == "closed" and br.resets == 1
+
+    def test_board_health_transitions(self):
+        clock = [0.0]
+        board = BreakerBoard(threshold=1, cooldown_s=10.0,
+                             now=lambda: clock[0])
+        assert board.health() == "ok"
+        board.breaker("a").record_failure()
+        assert board.health() == "degraded"    # open, fallback untested
+        board.record_degraded("a", ok=False)
+        assert board.health() == "tripped"     # open AND fallback failing
+        board.record_degraded("a", ok=True)
+        assert board.health() == "degraded"
+        board.breaker("a").record_success()
+        assert board.health() == "ok"
+        assert "a" in board.full_snapshot()["breakers"]
+
+
+# -- service-level self-healing --------------------------------------------
+
+def _runner(spec=None, **config_overrides):
+    from repro.serve.service import ServiceConfig, ServiceRunner
+    from repro.sort import SortSpec
+    spec = spec or SortSpec(exchange="allgather", tag=False)
+    cfg = ServiceConfig(max_batch=4, max_delay_ms=100.0, **config_overrides)
+    return ServiceRunner(spec=spec, config=cfg)
+
+
+class TestServiceSelfHealing:
+    def test_poison_request_is_bisected_out(self, rng):
+        from concurrent.futures import ThreadPoolExecutor
+        xs = [_keys(rng, poison=(i == 1)) for i in range(4)]
+        with _runner(max_batch_retries=1, retry_backoff_s=0.01) as runner:
+            with chaos.activate(FaultPlan(poison_key=-7)):
+                with ThreadPoolExecutor(4) as pool:
+                    futs = [pool.submit(runner.submit, x) for x in xs]
+                    results = []
+                    for f in futs:
+                        try:
+                            results.append(f.result())
+                        except InjectedFault as e:
+                            results.append(e)
+            m = runner.metrics()
+        for i, (x, res) in enumerate(zip(xs, results)):
+            if i == 1:
+                assert isinstance(res, InjectedFault), res
+                assert "poison" in str(res)
+            else:
+                np.testing.assert_array_equal(res, np.sort(x))
+        assert m["bisections"] >= 1
+        assert m["errors"] == 1 and m["served"] == 3
+
+    def test_executor_death_is_survived(self, rng):
+        x = _keys(rng)
+        with _runner(retry_backoff_s=0.01) as runner:
+            with chaos.activate(FaultPlan(die_at=(0,))):
+                got = runner.submit(x)
+            np.testing.assert_array_equal(got, np.sort(x))
+            m = runner.metrics()
+            health = runner.health()
+        assert m["executor_restarts"] == 1 and m["batch_retries"] == 1
+        assert health["executor"]["restarts"] == 1
+        assert health["health"] == "ok"
+
+    def test_breaker_opens_then_degraded_path_serves(self, rng):
+        xs = [_keys(rng) for _ in range(4)]
+        with _runner(max_batch_retries=0, breaker_threshold=2,
+                     breaker_cooldown_s=0.2) as runner:
+            # crash the first two batched dispatches: breaker trips; the
+            # third request must be served by the degraded per-request
+            # path (whose own dispatch, index 2, is clean)
+            with chaos.activate(FaultPlan(crash_at=(0, 1))):
+                for i in (0, 1):
+                    with pytest.raises(InjectedFault):
+                        runner.submit(xs[i])
+                assert runner.health()["health"] == "degraded"
+                np.testing.assert_array_equal(runner.submit(xs[2]),
+                                              np.sort(xs[2]))
+                m = runner.metrics()
+                assert m["degraded_requests"] == 1
+                # cooldown over: the half-open probe takes the batched
+                # path again, closing the breaker
+                time.sleep(0.3)
+                np.testing.assert_array_equal(runner.submit(xs[3]),
+                                              np.sort(xs[3]))
+            assert runner.health()["health"] == "ok"
+
+    def test_tripped_when_degraded_path_also_fails(self, rng):
+        xs = [_keys(rng) for _ in range(3)]
+        with _runner(max_batch_retries=0, breaker_threshold=2) as runner:
+            with chaos.activate(FaultPlan(crash_at=tuple(range(16)))):
+                for i in (0, 1):
+                    with pytest.raises(InjectedFault):
+                        runner.submit(xs[i])
+                with pytest.raises(InjectedFault):
+                    runner.submit(xs[2])   # degraded path crashes too
+                assert runner.health()["health"] == "tripped"
+                m = runner.metrics()
+        assert m["degraded_errors"] == 1
+        assert m["health"]["health"] == "tripped"
+
+    def test_injected_straggler_raises_timer_signal(self, rng):
+        x = _keys(rng, n=8 * 32)
+        with _runner(straggler_warmup=3,
+                     straggler_threshold=3.0) as runner:
+            runner.submit(x)   # cold compile — absorbed by median warmup
+            # the plan's dispatch counter starts at 0 on activation, so
+            # index 2 is the third (and last) in-plan batch — judged
+            # against the median-of-first-3 EWMA seed
+            with chaos.activate(FaultPlan(straggler_at=(2,),
+                                          straggler_delay_s=1.0)):
+                for _ in range(3):
+                    runner.submit(x)
+            m = runner.metrics()
+        assert m["batch_timer"]["stragglers"] >= 1

@@ -298,7 +298,9 @@ def test_http_roundtrip_and_error_mapping(rng, warm):
                 np.asarray(body["sorted"], np.int32), np.sort(x))
 
             with urllib.request.urlopen(base + "/healthz", timeout=10) as r:
-                assert json.loads(r.read()) == {"ok": True}
+                health = json.loads(r.read())
+                assert health["health"] == "ok"
+                assert health["executor"]["restarts"] == 0
             with urllib.request.urlopen(base + "/metrics", timeout=10) as r:
                 snap = json.loads(r.read())
             assert snap["served"] >= 1 and "exec_cache" in snap
