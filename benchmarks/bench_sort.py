@@ -11,6 +11,12 @@ root, committed as the perf trajectory and uploaded by CI):
                           acceptance bar is >= 2x over the sequential loop)
   sort/cache_cold_launch  first call on a fresh shape bucket: trace+compile
   sort/cache_warm_launch  second call on that bucket: executable-cache hit
+  sort/verify_*           device-side audit overhead (DESIGN.md Section 9):
+                          warm single + batched B=8 launches at
+                          verify=off/cheap/full; the derived field carries
+                          the percent overhead vs the unaudited row
+                          (acceptance: cheap < 10% on the warm batched
+                          path). Report-only, like every row here.
 """
 from __future__ import annotations
 
@@ -75,4 +81,24 @@ def run():
     rows.append(("sort/cache_warm_launch", round(warm_us, 1),
                  f"executable-cache hit; cold/warm="
                  f"{cold_us / max(warm_us, 1e-9):.1f}x"))
+
+    # audit overhead: same warm workloads at every verify tier. The off
+    # rows re-time the unaudited path inside this block so the overhead
+    # ratio compares like with like (same arrays, adjacent in time).
+    import dataclasses
+    base = {"single": None, "batched_b8": None}
+    for tier in ("off", "cheap", "full"):
+        vspec = dataclasses.replace(spec, verify=tier)
+        us_s = timeit(lambda x: sort(x, vspec).shards, xs_dev[0])
+        us_b = timeit(lambda v: sort_batched(v, vspec).shards, xs_dev)
+        for mode, us in (("single", us_s), ("batched_b8", us_b)):
+            if tier == "off":
+                base[mode] = us
+                derived = "audit disabled (overhead baseline)"
+            else:
+                over = 100 * (us - base[mode]) / max(base[mode], 1e-9)
+                derived = (f"verify={tier} warm; overhead_vs_off="
+                           f"{over:.1f}%")
+            rows.append((f"sort/verify_{tier}_{mode}", round(us, 1),
+                         derived))
     return rows

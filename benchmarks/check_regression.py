@@ -9,7 +9,8 @@ any kernel row slowed down by more than the threshold (default 25%).
 
 Only BENCH_kernels.json rows gate by default — the kernel microbenches are
 compiled single-op timings, stable enough for a hard bar; the end-to-end
-BENCH_sort.json rows (driver + adapter + collectives) and the
+BENCH_sort.json rows (driver + adapter + collectives, including the
+sort/verify_* audit-overhead rows from DESIGN.md Section 9) and the
 BENCH_serve.json rows (thread scheduling + asyncio on top) are reported
 for the trajectory but do not fail the build. Rows missing from either side (newly
 added or renamed benches) are skipped with a note.

@@ -18,6 +18,12 @@ well-defined seams and pays nothing when no plan is active —
     supervised executor absorbs it), and poison requests (any batch whose
     keys contain `poison_key` fails, reproducibly, until bisection
     isolates the poisoned request).
+  * `repro.sort.api` calls `corrupt_now()` once per *verified* launch so
+    a plan can arm a device-side bit-flip (`corrupt_at`/`corrupt_key`/
+    `corrupt_bit`) between the sort pipeline and its fused audit —
+    SILENT corruption that only `SortSpec(verify=...)` catches. Corrupted
+    launches bypass the executable cache entirely, so a clean cache line
+    can never serve (or be poisoned by) a corrupted trace.
 
 Everything is stdlib + numpy; importable without pulling in jax.
 
@@ -64,6 +70,18 @@ class FaultPlan:
     poison_key        any dispatched batch containing this key value
                       raises InjectedFault — the deterministic "poison
                       request" that only bisection can isolate.
+    corrupt_at        *audited-launch* indices (True = every launch) at
+                      which the verification layer (repro.sort.verify)
+                      XORs `corrupt_bit` into one output key device-side —
+                      SILENT corruption, detectable only by
+                      `SortSpec(verify=...)`. Consumed via `corrupt_now()`
+                      once per audited launch; corrupted launches are
+                      never cached, so the clean executable-cache lines
+                      stay unpoisoned.
+    corrupt_key       optional row filter for `corrupt_at`: only rows
+                      whose (encoded) keys contain this value are flipped.
+                      None flips every row of the armed launch.
+    corrupt_bit       which bit the injected flip targets.
     """
 
     clamp_pair_cap: int | None = None
@@ -72,6 +90,9 @@ class FaultPlan:
     crash_at: tuple = ()
     die_at: tuple = ()
     poison_key: int | float | None = None
+    corrupt_at: tuple | bool = ()
+    corrupt_key: int | float | None = None
+    corrupt_bit: int = 12
 
 
 class _ActivePlan:
@@ -79,8 +100,9 @@ class _ActivePlan:
         self.plan = plan
         self.lock = threading.Lock()
         self.dispatches = 0
+        self.corrupt_launches = 0
         self.injected: dict = {"straggler": 0, "crash": 0, "death": 0,
-                               "poison": 0, "clamp_traces": 0}
+                               "poison": 0, "clamp_traces": 0, "corrupt": 0}
 
 
 _lock = threading.Lock()
@@ -119,6 +141,36 @@ def trace_token():
     with state.lock:
         state.injected["clamp_traces"] += 1
     return ("chaos-clamp", state.plan.clamp_pair_cap)
+
+
+def corrupt_now():
+    """Consume one audited-launch index against the active plan's
+    `corrupt_at`. Returns `(corrupt_bit, corrupt_key)` when this launch
+    should carry the injected bit-flip, else None. Called by
+    `repro.sort.api` once per verified launch (verify="off" launches are
+    un-audited and never consume an index); overflow/verify-policy
+    re-launches each consume their own index, which is what lets
+    `corrupt_at=(0,)` model a transient fault a retry recovers from while
+    `corrupt_at=True` models a persistent one."""
+    state = _active
+    if state is None:
+        return None
+    plan = state.plan
+    if plan.corrupt_at is True:
+        armed_always = True
+    elif not plan.corrupt_at:
+        return None
+    else:
+        armed_always = False
+    with state.lock:
+        i = state.corrupt_launches
+        state.corrupt_launches += 1
+        armed = armed_always or i in plan.corrupt_at
+        if armed:
+            state.injected["corrupt"] += 1
+    if not armed:
+        return None
+    return (int(plan.corrupt_bit), plan.corrupt_key)
 
 
 def clamp_pair_cap(cap: int) -> int:
@@ -173,4 +225,6 @@ def stats() -> dict:
     if state is None:
         return {}
     with state.lock:
-        return {"dispatches": state.dispatches, **state.injected}
+        return {"dispatches": state.dispatches,
+                "corrupt_launches": state.corrupt_launches,
+                **state.injected}

@@ -58,6 +58,7 @@ from repro.sort import SortSpec
 SPEC_FIELDS = ("algorithm", "eps", "rounds", "sample_per_shard", "adaptive",
                "total_sample", "s", "exchange", "pair_factor", "out_slack",
                "on_overflow", "max_overflow_retries",
+               "verify", "on_verify_failure", "imbalance_slo",
                "stable", "tag", "seed", "kernel_policy")
 
 _ROUTES = {"/v1/sort": "sort", "/v1/argsort": "argsort",
@@ -200,6 +201,11 @@ def main(argv=None) -> None:
                     choices=["dense", "dense_spill", "ragged", "allgather"])
     ap.add_argument("--on-overflow", default="raise",
                     choices=["raise", "retry", "spill"])
+    ap.add_argument("--verify", default="off",
+                    choices=["off", "cheap", "full"],
+                    help="device-side postcondition audit tier")
+    ap.add_argument("--on-verify-failure", default="raise",
+                    choices=["raise", "retry", "fallback"])
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-delay-ms", type=float, default=5.0)
     ap.add_argument("--max-queue-depth", type=int, default=256)
@@ -217,7 +223,8 @@ def main(argv=None) -> None:
               "was set?) — run `python -m repro.serve.http`, or export "
               "XLA_FLAGS=--xla_force_host_platform_device_count=8")
     spec = SortSpec(algorithm=args.algorithm, exchange=args.exchange,
-                    on_overflow=args.on_overflow)
+                    on_overflow=args.on_overflow, verify=args.verify,
+                    on_verify_failure=args.on_verify_failure)
     config = ServiceConfig(
         max_batch=args.max_batch, max_delay_ms=args.max_delay_ms,
         max_queue_depth=args.max_queue_depth,

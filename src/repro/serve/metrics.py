@@ -58,7 +58,10 @@ class _BucketMetrics:
         self.retries = 0
         self.bisections = 0
         self.degraded = 0
+        self.verify_failures = 0
+        self.verify_fallbacks = 0
         self.latency_s = deque(maxlen=window)
+        self.imbalance = deque(maxlen=window)
 
     def as_dict(self) -> dict:
         lat = list(self.latency_s)
@@ -84,6 +87,14 @@ class _BucketMetrics:
             "retries": self.retries,
             "bisections": self.bisections,
             "degraded": self.degraded,
+            "verify_failures": self.verify_failures,
+            "verify_fallbacks": self.verify_fallbacks,
+            "imbalance": {
+                "p50": percentile(list(self.imbalance), 0.50),
+                "p99": percentile(list(self.imbalance), 0.99),
+                "max": max(self.imbalance, default=0.0),
+                "samples": len(self.imbalance),
+            },
             "latency_ms": {
                 "p50": 1e3 * percentile(lat, 0.50),
                 "p99": 1e3 * percentile(lat, 0.99),
@@ -123,6 +134,10 @@ class MetricsRegistry:
         self.degraded_errors = 0
         self.overflow_retries = 0
         self.overflow_recovered = 0
+        self.verify_failures = 0
+        self.verify_retries = 0
+        self.verify_fallbacks = 0
+        self.verify_failed_requests = 0
         self.batch_timer = StepTimer(threshold=self._straggler_threshold,
                                      warmup=self._straggler_warmup)
 
@@ -191,13 +206,36 @@ class MetricsRegistry:
                 self.degraded_errors += 1
 
     def observe_recovery(self, key, recovery) -> None:
-        """Engine-level overflow recovery (repro.sort.RecoveryStats)
-        attached to a batch output by `on_overflow="retry"`."""
-        if recovery is None or recovery.attempts <= 1:
+        """Engine-level recovery record (repro.sort.RecoveryStats): the
+        overflow-retry trail, the verification policy's failed-audit /
+        fallback counters, and the achieved partition imbalance (the
+        paper's (1+eps) quantity, sampled into a per-bucket reservoir for
+        the /metrics quantiles)."""
+        if recovery is None:
             return
         with self._lock:
-            self.overflow_retries += recovery.attempts - 1
-            self.overflow_recovered += recovery.recovered_overflow
+            b = self._bucket(key)
+            if recovery.attempts > 1:
+                self.overflow_retries += recovery.attempts - 1
+                self.overflow_recovered += recovery.recovered_overflow
+            if recovery.verify_failures:
+                self.verify_failures += recovery.verify_failures
+                self.verify_retries += recovery.verify_retries
+                b.verify_failures += recovery.verify_failures
+            if recovery.verify_fallback:
+                self.verify_fallbacks += 1
+                b.verify_fallbacks += 1
+            if recovery.achieved_imbalance is not None:
+                b.imbalance.append(float(recovery.achieved_imbalance))
+
+    def observe_verify_failure(self, key, rows: int = 1) -> None:
+        """Requests whose device-side audit terminally failed (served as
+        typed VerificationErrors after the policy gave up). The audit
+        counters themselves arrive via `observe_recovery` — the raised
+        output's RecoveryStats carries them — so only the per-request
+        total is counted here."""
+        with self._lock:
+            self.verify_failed_requests += rows
 
     def observe_result(self, key, latency_s: float, *, ok: bool = True) -> None:
         with self._lock:
@@ -228,6 +266,10 @@ class MetricsRegistry:
                 "degraded_errors": self.degraded_errors,
                 "overflow_retries": self.overflow_retries,
                 "overflow_recovered": self.overflow_recovered,
+                "verify_failures": self.verify_failures,
+                "verify_retries": self.verify_retries,
+                "verify_fallbacks": self.verify_fallbacks,
+                "verify_failed_requests": self.verify_failed_requests,
                 "batch_timer": self.batch_timer.snapshot(),
                 "buckets": {repr(k): b.as_dict()
                             for k, b in self._buckets.items()},

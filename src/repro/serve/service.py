@@ -36,6 +36,15 @@ degraded per-request path (unbatched `repro.sort` front-door calls under
 board aggregates into the ok | degraded | tripped health state served by
 `GET /healthz`.
 
+Verified serving (DESIGN.md Section 9): with `SortSpec(verify=...)` every
+batch carries the fused device-side audit. A `BatchVerificationError` is
+absorbed per-row — verified siblings are salvaged bit-exact from the same
+launch, each failed row fails alone with a typed `VerificationError` —
+and a batch with terminally failed rows counts as a breaker failure
+event, so *repeated* verify failures trip the bucket onto the degraded
+path exactly like crashes do. Per-bucket verify failures/fallbacks and
+achieved-imbalance quantiles land in `GET /metrics`.
+
 Threaded callers (the stdlib HTTP front end, benchmarks) use
 `ServiceRunner`, which owns the event loop in a daemon thread and exposes
 a blocking `submit`.
@@ -57,8 +66,8 @@ from repro.serve.batcher import DynamicBatcher, Request
 from repro.serve.breaker import BreakerBoard
 from repro.serve.errors import DeadlineExceeded, Overloaded, ServiceClosed
 from repro.serve.metrics import MetricsRegistry
-from repro.sort import (SortSpec, bucket_key, gather_perm_checked,
-                        sort_batched)
+from repro.sort import (BatchVerificationError, SortSpec, VerificationError,
+                        bucket_key, gather_perm_checked, sort_batched)
 from repro.sort import argsort as sort_argsort
 from repro.sort import driver as sort_driver
 from repro.sort import sort as sort_single
@@ -306,10 +315,19 @@ class SortService:
                 await asyncio.sleep(
                     self.config.retry_backoff_s * (2 ** (attempt - 1)))
             try:
-                results, delta = await self._loop.run_in_executor(
+                results, delta, verify_bad = await self._loop.run_in_executor(
                     self._executor, self._run_batch, reqs)
                 if top:
-                    br.record_success()
+                    # a batch whose audit terminally failed rows is a
+                    # breaker failure event even though its verified
+                    # siblings were salvaged: repeated verify failures on
+                    # a bucket mean the batched executable (or the data
+                    # path under it) is corrupting and must trip onto the
+                    # degraded path like any other batch-level fault
+                    if verify_bad:
+                        br.record_failure()
+                    else:
+                        br.record_success()
                 return results, delta
             except chaos.ExecutorDeath as e:
                 # the worker itself is poisoned — restart the pool; the
@@ -397,7 +415,12 @@ class SortService:
         All requests share a bucket key, hence an (n,), dtype, kind, and
         spec — stacking is safe. Returns per-request results in input
         order (exceptions as values: an overflow on one argsort request
-        fails that request, not its batchmates)."""
+        fails that request, not its batchmates), the bucket's exec-cache
+        delta, and the count of requests whose device-side audit
+        terminally failed. A BatchVerificationError is absorbed here:
+        its per-row verdicts salvage the verified siblings (served
+        bit-exact from the same launch) while each failed row gets a
+        typed VerificationError carrying its own row verdict."""
         spec, kind = reqs[0].spec, reqs[0].kind
         b_real = len(reqs)
         xs = np.stack([r.x for r in reqs])
@@ -408,11 +431,24 @@ class SortService:
                 xs = np.concatenate(
                     [xs, np.broadcast_to(xs[-1], (b_pad - b_real,) + xs[-1].shape)])
         stats0 = sort_driver.exec_cache.stats()
-        out = sort_batched(jnp.asarray(xs), spec)
+        verify_err = None
+        try:
+            out = sort_batched(jnp.asarray(xs), spec)
+            row_ok = None
+        except BatchVerificationError as e:
+            verify_err, out = e, e.output
+            row_ok = e.row_ok
         self.metrics.observe_recovery(
             reqs[0].key, getattr(out, "recovery", None))
         results = []
+        verify_bad = 0
         for b in range(b_real):
+            if row_ok is not None and not row_ok[b]:
+                verify_bad += 1
+                results.append(VerificationError(
+                    f"request failed the device-side audit: {verify_err}",
+                    verify_err.report.row(b)))
+                continue
             r = out.request(b)
             if kind == "sort":
                 results.append(r.gather())
@@ -428,10 +464,12 @@ class SortService:
                 results.append(order)
             else:   # sort_kv
                 results.append((r.gather(), reqs[b].values[order]))
+        if verify_bad:
+            self.metrics.observe_verify_failure(reqs[0].key, verify_bad)
         stats1 = sort_driver.exec_cache.stats()
         delta = {k: stats1[k] - stats0[k]
                  for k in ("hits", "misses", "evictions")}
-        return results, delta
+        return results, delta, verify_bad
 
     # -- health ------------------------------------------------------------
 

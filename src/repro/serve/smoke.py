@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python -m repro.serve.smoke            # steady state
     PYTHONPATH=src python -m repro.serve.smoke --chaos    # fault drill
+    PYTHONPATH=src python -m repro.serve.smoke --corrupt  # audit drill
 
 Steady-state mode starts the HTTP front end in-process (8 simulated host
 devices), warms every (bucket, padded-batch-size) executable, resets the
@@ -25,6 +26,20 @@ the self-healing contract:
   * the poison request alone fails (HTTP 500 naming the injected fault);
   * after the plan disarms, the service serves clean traffic and
     `GET /healthz` reports `health == "ok"`.
+
+Corrupt mode (`--corrupt`, DESIGN.md Section 9) serves under an armed
+device-side bit-flip (`chaos.FaultPlan(corrupt_at=True, corrupt_key=...)`)
+with `SortSpec(verify="cheap")` and asserts the verified-serving contract:
+
+  * the corrupted request fails with HTTP 500 naming the typed
+    `VerificationError`, while its batchmates are salvaged bit-exact from
+    the SAME launch (no bisection needed — per-row audit verdicts);
+  * repeated verify failures trip the bucket's circuit breaker (health
+    "degraded"), and the degraded per-request path keeps serving clean
+    requests — still audited — under the armed plan;
+  * after the plan disarms, a cooldown probe closes the breaker
+    (`/healthz` back to "ok") and the executable cache serves clean
+    traffic hit-only: corrupted launches never touched it.
 """
 from __future__ import annotations
 
@@ -174,6 +189,149 @@ def chaos_main() -> int:
     return 0
 
 
+def corrupt_main() -> int:
+    """The audit drill: a device-side bit-flip served over HTTP."""
+    import time as _time
+
+    from repro.runtime import chaos
+    from repro.serve.http import make_server
+    from repro.serve.service import ServiceConfig, ServiceRunner
+    from repro.sort import SortSpec, sort_batched
+
+    n = 8 * 64
+    rng = np.random.default_rng(0)
+    spec = SortSpec(exchange="allgather", tag=False, verify="cheap")
+    config = ServiceConfig(max_batch=4, max_delay_ms=150.0,
+                           breaker_threshold=2, breaker_cooldown_s=0.5)
+
+    def fresh(marked: bool = False) -> np.ndarray:
+        x = rng.permutation(4 * n)[:n].astype(np.int32)
+        if marked:
+            x[0] = -7   # inputs are non-negative: -7 marks the corrupt row
+        return x
+
+    # warm the clean verified executables (B = 1, 2, 4); corrupted
+    # launches below must never be served from — or poison — these lines
+    import jax.numpy as jnp
+    for b in (1, 2, 4):
+        sort_batched(jnp.asarray(np.stack([fresh() for _ in range(b)])), spec)
+
+    with ServiceRunner(spec=spec, config=config) as runner:
+        server = make_server(runner, port=0)
+        base = f"http://{server.server_address[0]}:{server.server_address[1]}"
+        threading.Thread(target=server.serve_forever, daemon=True).start()
+        try:
+            runner.reset_metrics()
+
+            def one(x):
+                return _post(base, "/v1/sort",
+                             {"keys": x.tolist(), "dtype": "int32"})
+
+            plan = chaos.FaultPlan(corrupt_at=True, corrupt_key=-7)
+            with chaos.activate(plan):
+                # wave A: one marked request among three clean batchmates —
+                # the audit fails exactly the marked row; siblings are
+                # salvaged bit-exact from the same launch
+                wave = [fresh(marked=(i == 2)) for i in range(4)]
+                with ThreadPoolExecutor(4) as pool:
+                    out = list(pool.map(one, wave))
+                for i, (x, (status, body)) in enumerate(zip(wave, out)):
+                    if i == 2:
+                        assert status == 500, (status, body)
+                        assert "VerificationError" in body["error"], body
+                    else:
+                        assert status == 200, body
+                        np.testing.assert_array_equal(
+                            np.asarray(body["sorted"], np.int32), np.sort(x))
+
+                # wave B: sequential marked requests, each its own batch,
+                # until the repeated verify failures trip the breaker
+                marked_total = 1   # wave A's marked request
+                for _ in range(6):
+                    status, body = one(fresh(marked=True))
+                    assert status == 500, (status, body)
+                    assert "VerificationError" in body["error"], body
+                    marked_total += 1
+                    status, health = _get(base, "/healthz")
+                    if health["health"] != "ok":
+                        break
+                else:
+                    raise AssertionError(
+                        f"breaker never tripped: {health}")
+                trips = sum(b["trips"]
+                            for b in health["breakers"].values())
+                assert trips >= 1, health
+
+                # open breaker: clean traffic keeps serving (degraded
+                # per-request path, or the half-open probe) — still
+                # audited, still under the armed plan
+                x = fresh()
+                status, body = one(x)
+                assert status == 200, body
+                np.testing.assert_array_equal(
+                    np.asarray(body["sorted"], np.int32), np.sort(x))
+                fired = chaos.stats()
+            print(f"corrupt fired: {fired}")
+            assert fired["corrupt"] >= 3, fired
+
+            # plan disarmed: the cooldown probe closes the breaker and
+            # health returns to ok
+            for _ in range(4):
+                _time.sleep(config.breaker_cooldown_s + 0.2)
+                x = fresh()
+                status, body = one(x)
+                assert status == 200, body
+                np.testing.assert_array_equal(
+                    np.asarray(body["sorted"], np.int32), np.sort(x))
+                status, health = _get(base, "/healthz")
+                if status == 200 and health["health"] == "ok":
+                    break
+            assert status == 200 and health["health"] == "ok", health
+
+            _, m = _get(base, "/metrics")
+            print(f"served={m['served']} errors={m['errors']} "
+                  f"verify_failures={m['verify_failures']} "
+                  f"verify_failed_requests={m['verify_failed_requests']} "
+                  f"bisections={m['bisections']} "
+                  f"health={m['health']['health']}")
+            assert 2 <= m["verify_failed_requests"] <= marked_total, m
+            assert m["errors"] == marked_total, m
+            assert m["bisections"] == 0, m   # per-row salvage, no bisection
+            bucket_fail = sum(b["verify_failures"]
+                              for b in m["buckets"].values())
+            assert bucket_fail >= 2, m["buckets"]
+
+            # cache-contamination window: warm clean traffic must be
+            # hit-only — the corrupted launches bypassed the cache
+            runner.reset_metrics()
+            wave = [fresh() for _ in range(4)]
+            with ThreadPoolExecutor(4) as pool:
+                out = list(pool.map(one, wave))
+            for x, (status, body) in zip(wave, out):
+                assert status == 200, body
+                np.testing.assert_array_equal(
+                    np.asarray(body["sorted"], np.int32), np.sort(x))
+            _, m = _get(base, "/metrics")
+            hits = sum(b["cache"]["hits"] for b in m["buckets"].values())
+            misses = sum(b["cache"]["misses"] for b in m["buckets"].values())
+            print(f"clean window: cache_hits={hits} cache_misses={misses}")
+            assert hits > 0 and misses == 0, (hits, misses)
+
+            # the verify tier is caller-overridable through the spec
+            # whitelist: a full-tier request compiles its own (clean) line
+            x = fresh()
+            status, body = _post(base, "/v1/sort",
+                                 {"keys": x.tolist(), "dtype": "int32",
+                                  "spec": {"verify": "full"}})
+            assert status == 200, body
+            np.testing.assert_array_equal(
+                np.asarray(body["sorted"], np.int32), np.sort(x))
+        finally:
+            server.shutdown()
+    print("serve corrupt smoke: OK")
+    return 0
+
+
 def main() -> int:
     from repro.serve.http import make_server
     from repro.serve.service import ServiceConfig, ServiceRunner
@@ -251,5 +409,10 @@ if __name__ == "__main__":
     ap.add_argument("--chaos", action="store_true",
                     help="run the fault-injection drill instead of the "
                          "steady-state smoke")
+    ap.add_argument("--corrupt", action="store_true",
+                    help="run the silent-corruption audit drill instead of "
+                         "the steady-state smoke")
     cli = ap.parse_args()
-    sys.exit(chaos_main() if cli.chaos else main())
+    if cli.chaos:
+        sys.exit(chaos_main())
+    sys.exit(corrupt_main() if cli.corrupt else main())

@@ -21,6 +21,13 @@ cache (`exec_cache`) keyed by shape bucket — see DESIGN.md Section 6:
     outs = sort_batched(xs_2d)       # (B, n) -> BatchedSortOutput
     outs = sort_batched([a, b, c])   # length-bucketed list -> per-request
 
+Verified mode (DESIGN.md Section 9): `SortSpec(verify="cheap")` fuses a
+device-side postcondition audit (multiset fingerprint + sortedness +
+boundary/range + count conservation) into the launch; failures surface as
+typed `VerificationError`s or auto-recover per `on_verify_failure`, and
+`SortSpec(imbalance_slo=...)` enforces the paper's (1+eps) partition
+quality at runtime.
+
 The legacy per-algorithm entry points (`repro.core.hss_sort` et al.) remain
 as thin shims over the same driver.
 """
@@ -32,11 +39,16 @@ from repro.sort.driver import exec_cache
 from repro.sort.partitioners import (
     Partitioner, ShardCtx, available_algorithms, get_partitioner,
     register_partitioner)
-from repro.sort.spec import ALGORITHMS, ON_OVERFLOW, SortSpec
+from repro.sort.spec import (ALGORITHMS, ON_OVERFLOW, ON_VERIFY_FAILURE,
+                             VERIFY, SortSpec)
+from repro.sort.verify import (AuditReport, BatchVerificationError,
+                               ImbalanceError, VerificationError)
 
 __all__ = [
-    "ALGORITHMS", "BatchedSortOutput", "ON_OVERFLOW", "Partitioner",
-    "RecoveryStats", "ShardCtx", "SortOutput", "SortSpec", "argsort",
+    "ALGORITHMS", "AuditReport", "BatchVerificationError",
+    "BatchedSortOutput", "ImbalanceError", "ON_OVERFLOW",
+    "ON_VERIFY_FAILURE", "Partitioner", "RecoveryStats", "ShardCtx",
+    "SortOutput", "SortSpec", "VERIFY", "VerificationError", "argsort",
     "available_algorithms", "bucket_key", "exec_cache", "gather",
     "gather_perm_checked", "get_partitioner", "register_partitioner",
     "sort", "sort_batched", "sort_kv", "spec_fingerprint",

@@ -52,10 +52,15 @@ class SortOutput:
              partitioner (splitter keys decoded back to the key domain).
     recovery overflow-recovery stats (repro.sort.RecoveryStats) attached
              by the `on_overflow="retry"` policy; None otherwise.
+    audit    verification verdict (repro.sort.verify.AuditReport) attached
+             when the sort ran with `verify != "off"`; None otherwise.
     n        number of real input keys.
     """
 
     recovery = None
+    audit = None
+    _audit_vec = None
+    _audit_expected = 0
 
     def __init__(self, shards, counts, indices, overflow, splitter_keys,
                  splitter_ranks, stats, n):
@@ -92,10 +97,14 @@ class BatchedSortOutput:
     per-request (SplitterStats rows of shape (k, B)), n = per-request real
     key count. `request(b)` views one request as a regular SortOutput;
     `recovery` (batch-level overflow-recovery stats, see SortOutput) is
-    carried onto every view.
+    carried onto every view, and `audit` (batch-level AuditReport with
+    per-row verdicts) is narrowed to the request's own row.
     """
 
     recovery = None
+    audit = None
+    _audit_vec = None
+    _audit_expected = 0
 
     def __init__(self, shards, counts, indices, overflow, splitter_keys,
                  splitter_ranks, stats, n):
@@ -120,6 +129,8 @@ class BatchedSortOutput:
             self.overflow[b], self.splitter_keys[b], self.splitter_ranks[b],
             self.stats, self.n)
         out.recovery = self.recovery
+        if self.audit is not None:
+            out.audit = self.audit.row(b)
         return out
 
     def gather(self, b: int) -> np.ndarray:

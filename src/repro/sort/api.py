@@ -22,26 +22,43 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.ams import ams_sample_size
+from repro.core.sample_sort import default_regular_s, default_total_sample
 from repro.kernels import dispatch
 from repro.runtime import chaos
-from repro.sort import driver
+from repro.sort import driver, verify
 from repro.sort.adapters import BatchedSortOutput, SortOutput, make_plan
 from repro.sort.partitioners import ShardCtx, get_partitioner
 from repro.sort.spec import SortSpec
+from repro.sort.verify import (BatchVerificationError, ImbalanceError,
+                               VerificationError)
 
 
 @dataclasses.dataclass(frozen=True)
 class RecoveryStats:
-    """How an `on_overflow="retry"` sort resolved (attached to the returned
-    output as `.recovery`; None under other policies).
+    """How the recovery policies resolved a sort (attached to the returned
+    output as `.recovery`; None when no policy had anything to record).
 
-    policy            the on_overflow policy that ran ("retry").
+    policy            the on_overflow policy that ran.
     attempts          total launches, 1 = first launch was already exact.
     escalations       capacity_scale of each re-launch, in order.
     spill_fallback    True when the final attempt used the spill channel.
     recovered_overflow  the overflow count of the first (failed) launch —
                       how many keys would have been dropped without the
                       policy.
+    verify_failures   audits that FAILED across all launches (0 = the
+                      audit, if any, passed first time).
+    verify_retries    re-launches the on_verify_failure="retry" policy
+                      spent.
+    verify_fallback   True when a failed audit was retried on the
+                      conservative fallback path (spill + xla kernels).
+    achieved_imbalance  max_shard_load / (N/p) of the served output (the
+                      paper's (1+eps) quantity, worst row on the batched
+                      path); recorded whenever verify != "off" or an
+                      imbalance_slo is set.
+    imbalance_recovery  None, or how an imbalance-SLO violation was
+                      auto-recovered: "tag" (duplicate tagging) or
+                      "refine" (bonus splitter refinement).
     """
 
     policy: str
@@ -49,6 +66,11 @@ class RecoveryStats:
     escalations: tuple
     spill_fallback: bool
     recovered_overflow: int
+    verify_failures: int = 0
+    verify_retries: int = 0
+    verify_fallback: bool = False
+    achieved_imbalance: float | None = None
+    imbalance_recovery: str | None = None
 
 
 def _as_spec(spec, overrides) -> SortSpec:
@@ -83,7 +105,8 @@ def _spec_trace_fields(spec: SortSpec) -> tuple:
     return (spec.algorithm, spec.eps, spec.rounds, spec.sample_per_shard,
             spec.adaptive, spec.total_sample, spec.s,
             spec.resolved_exchange(), spec.pair_factor, spec.out_slack,
-            spec.capacity_scale, spec.kernel_policy, chaos.trace_token())
+            spec.capacity_scale, spec.kernel_policy, spec.verify,
+            chaos.trace_token())
 
 
 def spec_fingerprint(spec: SortSpec):
@@ -97,7 +120,8 @@ def spec_fingerprint(spec: SortSpec):
     if spec.local_sort_fn is not None or spec.initial_probes is not None:
         return None
     return _spec_trace_fields(spec) + (
-        spec.stable, spec.tag, spec.seed, _mesh_fingerprint(spec))
+        spec.stable, spec.tag, spec.seed, spec.on_verify_failure,
+        spec.imbalance_slo, _mesh_fingerprint(spec))
 
 
 def bucket_key(n, dtype, spec: SortSpec, *, kind: str = "sort"):
@@ -142,12 +166,28 @@ def _sort_impl(x, spec: SortSpec, want_indices: bool) -> SortOutput:
     ctx = ShardCtx(spec=spec, axis_names=names, sizes=sizes, rng=None,
                    initial_probes=probes)
     p1_sort = spec.local_sort_fn or dispatch.local_sort_fn(spec.kernel_policy)
+    sort_fn = lambda local, rng: part.sharded(local, rng, ctx)
+    cache_key = _cache_key(spec, names, sizes, enc, batched=False)
+    audit = spec.verify != "off" and p > 1
+    if audit:
+        corrupt = chaos.corrupt_now()
+        if corrupt is not None:
+            cache_key = None   # a corrupted executable must never be cached
+        sort_fn = verify.audited(sort_fn, tier=spec.verify, axis_names=names,
+                                 sizes=sizes, batched=False, corrupt=corrupt)
     raw = driver.run(
-        lambda local, rng: part.sharded(local, rng, ctx),
+        sort_fn,
         enc, mesh=spec.mesh, axis_names=names, sizes=sizes, seed=spec.seed,
-        n_real=plan.n, local_sort_fn=p1_sort,
-        cache_key=_cache_key(spec, names, sizes, enc, batched=False))
-    return plan.decode(raw)
+        n_real=plan.n, local_sort_fn=p1_sort, cache_key=cache_key)
+    audit_vec = None
+    if audit:
+        raw, audit_vec = verify.split_raw(raw)
+    elif spec.verify != "off":   # p == 1 short-circuit bypasses sort_fn
+        audit_vec = verify.audit_p1(enc, raw[0], raw[1], spec.verify)
+    out = plan.decode(raw)
+    out._audit_vec = audit_vec
+    out._audit_expected = plan.n + plan.n_pad
+    return out
 
 
 def _sort_batched_impl(xs, spec: SortSpec,
@@ -166,12 +206,28 @@ def _sort_batched_impl(xs, spec: SortSpec,
                    initial_probes=probes)
     p1_sort = (jax.vmap(spec.local_sort_fn) if spec.local_sort_fn is not None
                else dispatch.local_sort_batched_fn(spec.kernel_policy))
+    sort_fn = lambda local, rng: part.sharded_batched(local, rng, ctx)
+    cache_key = _cache_key(spec, names, sizes, enc, batched=True)
+    audit = spec.verify != "off" and p > 1
+    if audit:
+        corrupt = chaos.corrupt_now()
+        if corrupt is not None:
+            cache_key = None   # a corrupted executable must never be cached
+        sort_fn = verify.audited(sort_fn, tier=spec.verify, axis_names=names,
+                                 sizes=sizes, batched=True, corrupt=corrupt)
     raw = driver.run_batched(
-        lambda local, rng: part.sharded_batched(local, rng, ctx),
+        sort_fn,
         enc, mesh=spec.mesh, axis_names=names, sizes=sizes, seed=spec.seed,
-        n_real=plan.n, local_sort_fn=p1_sort,
-        cache_key=_cache_key(spec, names, sizes, enc, batched=True))
-    return plan.decode_batched(raw)
+        n_real=plan.n, local_sort_fn=p1_sort, cache_key=cache_key)
+    audit_vec = None
+    if audit:
+        raw, audit_vec = verify.split_raw(raw)
+    elif spec.verify != "off":   # p == 1 short-circuit bypasses sort_fn
+        audit_vec = verify.audit_p1(enc, raw[0], raw[1], spec.verify)
+    out = plan.decode_batched(raw)
+    out._audit_vec = audit_vec
+    out._audit_expected = plan.n + plan.n_pad
+    return out
 
 
 def _sort_batched_buckets(arrs, spec: SortSpec) -> list:
@@ -186,10 +242,10 @@ def _sort_batched_buckets(arrs, spec: SortSpec) -> list:
     results = [None] * len(arrs)
     for _, idxs in group_by_length(arrs).items():
         stacked = jnp.stack([arrs[i] for i in idxs])
-        out = _with_overflow_policy(
+        out = _with_policies(
             lambda s, xs=stacked: _sort_batched_impl(xs, s,
                                                      want_indices=False),
-            spec)
+            spec, batched=True)
         for j, i in enumerate(idxs):
             results[i] = out.request(j)
     return results
@@ -260,6 +316,165 @@ def _with_overflow_policy(run, spec: SortSpec):
     return out
 
 
+def _update_recovery(out, spec: SortSpec, **fields) -> None:
+    """Merge verify/imbalance results into the output's RecoveryStats,
+    creating a baseline record when no overflow policy attached one."""
+    base = out.recovery
+    if base is None:
+        base = RecoveryStats(spec.on_overflow, 1, (), False, 0)
+    out.recovery = dataclasses.replace(base, **fields)
+
+
+def _finalize_audit(out, spec: SortSpec):
+    """Materialize a launch's audit vector into an AuditReport (the one
+    deliberate host sync per verified launch) and attach it as
+    `out.audit`. Returns None when the launch was not audited."""
+    vec = getattr(out, "_audit_vec", None)
+    if vec is None:
+        return None
+    batched = isinstance(out, BatchedSortOutput)
+    report = verify.finalize(vec, tier=spec.verify,
+                             n_expected=out._audit_expected, batched=batched)
+    report.achieved_imbalance = _imbalance(out)
+    out.audit = report
+    return report
+
+
+def _imbalance(out):
+    """achieved_imbalance = max_shard_load / (N/p), per request on the
+    batched path ((B,) array). Counts are already host-bound alongside the
+    audit verdict, so this costs no extra launch."""
+    counts = np.asarray(out.counts)
+    p = counts.shape[-1]
+    return counts.max(axis=-1).astype(np.float64) * p / float(out.n)
+
+
+def _fallback_spec(spec: SortSpec) -> SortSpec:
+    """The maximally-conservative configuration a failed audit falls back
+    to: the exact spill exchange channel (dense -> dense_spill) and the
+    plain XLA kernel path — sidestepping both the capacity-dropping
+    exchange and a suspected kernel miscompile in one hop."""
+    return dataclasses.replace(spec, on_overflow="spill",
+                               kernel_policy="xla")
+
+
+def _enforce_verify(inner, spec: SortSpec, out, *, batched: bool):
+    """Apply `spec.on_verify_failure` to an audited output: judge the
+    fused audit, and on failure walk retry -> fallback -> raise ("retry"),
+    fallback -> raise ("fallback"), or raise immediately. Every attempt
+    re-audits; the recovery trail lands on `out.recovery`."""
+    report = _finalize_audit(out, spec)
+    if report is None:
+        return out
+    failures = retries = 0
+    fellback = False
+    while not report.ok:
+        failures += 1
+        if spec.on_verify_failure == "retry" and retries == 0:
+            retries = 1
+            cand = inner(spec)
+        elif spec.on_verify_failure in ("retry", "fallback") \
+                and not fellback:
+            fellback = True
+            cand = inner(_fallback_spec(spec))
+        else:
+            _update_recovery(out, spec, verify_failures=failures,
+                             verify_retries=retries,
+                             verify_fallback=fellback,
+                             achieved_imbalance=float(
+                                 np.max(report.achieved_imbalance)))
+            msg = report.describe()
+            if batched:
+                raise BatchVerificationError(msg, report, out)
+            raise VerificationError(msg, report)
+        report = _finalize_audit(cand, spec)
+        out = cand
+    _update_recovery(out, spec, verify_failures=failures,
+                     verify_retries=retries, verify_fallback=fellback,
+                     achieved_imbalance=float(
+                         np.max(report.achieved_imbalance)))
+    return out
+
+
+def _refined_spec(spec: SortSpec, p: int, n_local: int) -> SortSpec:
+    """Bonus-refinement configuration for the imbalance-SLO ladder:
+    double the splitter-determination effort of whichever knob the
+    algorithm actually samples with (plus two bonus histogram rounds for
+    the HSS family, whose refinement is per-round)."""
+    if spec.algorithm in ("hss", "multistage"):
+        cfg = spec.hss_config()
+        return dataclasses.replace(
+            spec, rounds=cfg.resolved_rounds(p) + 2,
+            sample_per_shard=2 * cfg.resolved_sample_cap(p))
+    if spec.algorithm == "sample_regular":
+        return dataclasses.replace(
+            spec, s=2 * (spec.s or default_regular_s(p, spec.eps)))
+    if spec.algorithm == "ams":
+        base = spec.total_sample or ams_sample_size(p, spec.eps, n_local * p)
+        return dataclasses.replace(spec, total_sample=2 * base)
+    base = spec.total_sample or default_total_sample(p, n_local, spec.eps)
+    return dataclasses.replace(spec, total_sample=2 * base)
+
+
+def _enforce_slo(inner, spec: SortSpec, out, *, batched: bool):
+    """Partition-quality SLO: record achieved_imbalance whenever it is
+    already materialized (verify on, or an SLO set) and, when it exceeds
+    `spec.imbalance_slo`, auto-recover — duplicate tagging first (the
+    usual cause is a duplicate pileup the untagged splitters cannot cut),
+    then bonus refinement — raising ImbalanceError only when both fail."""
+    slo = spec.imbalance_slo
+    if slo is None and spec.verify == "off":
+        return out
+    worst = float(np.max(_imbalance(out)))
+    recovery = None
+    if slo is not None and worst > slo:
+        p = np.asarray(out.counts).shape[-1]
+        n_local = (out.n + (-out.n) % p) // p
+        ladder = []
+        if out.indices is None and spec.tag is None:
+            ladder.append(("tag", dataclasses.replace(spec, tag=True)))
+        refine_base = (dataclasses.replace(spec, tag=True)
+                       if out.indices is None and spec.tag is None else spec)
+        ladder.append(("refine", _refined_spec(refine_base, p, n_local)))
+        for name, cand_spec in ladder:
+            try:
+                cand = inner(cand_spec)
+            except ValueError:   # tag packing budget does not fit
+                continue
+            rep = _finalize_audit(cand, cand_spec)
+            if rep is not None and not rep.ok:
+                raise VerificationError(
+                    "imbalance-SLO recovery attempt failed its own audit: "
+                    + rep.describe(), rep)
+            ci = float(np.max(_imbalance(cand)))
+            if ci <= slo:
+                out, worst, recovery = cand, ci, name
+                break
+        else:
+            _update_recovery(out, spec, achieved_imbalance=worst)
+            raise ImbalanceError(
+                f"achieved_imbalance {worst:.3f} > imbalance_slo {slo:.3f} "
+                f"after duplicate tagging and bonus refinement "
+                f"(algorithm={spec.algorithm}, eps={spec.eps})", worst, slo)
+    if getattr(out, "audit", None) is not None:
+        out.audit.achieved_imbalance = _imbalance(out)
+    _update_recovery(out, spec, achieved_imbalance=worst,
+                     imbalance_recovery=recovery)
+    return out
+
+
+def _with_policies(run, spec: SortSpec, *, batched: bool = False):
+    """The full policy stack around one sort: the overflow policy runs
+    innermost (every launch, including verify/SLO re-launches, gets
+    overflow recovery), then the verification policy, then the
+    imbalance SLO."""
+    inner = lambda s: _with_overflow_policy(run, s)
+    out = inner(spec)
+    out = _enforce_verify(inner, spec, out, batched=batched)
+    out = _enforce_slo(inner, spec, out, batched=batched)
+    return out
+
+
 def sort(x, spec: SortSpec | None = None, **overrides) -> SortOutput:
     """Sort a 1-D array of keys across the mesh. Returns a SortOutput whose
     `shards`/`counts` are the distributed result and `.gather()` the flat
@@ -272,7 +487,7 @@ def sort(x, spec: SortSpec | None = None, **overrides) -> SortOutput:
     spec = _as_spec(spec, overrides)
     if spec.batch:
         return sort_batched(x, spec)
-    return _with_overflow_policy(
+    return _with_policies(
         lambda s: _sort_impl(x, s, want_indices=False), spec)
 
 
@@ -295,9 +510,9 @@ def sort_batched(xs, spec: SortSpec | None = None, **overrides):
     spec = _as_spec(spec, overrides)
     if isinstance(xs, (list, tuple)):
         return _sort_batched_buckets(xs, spec)
-    return _with_overflow_policy(
+    return _with_policies(
         lambda s: _sort_batched_impl(jnp.asarray(xs), s, want_indices=False),
-        spec)
+        spec, batched=True)
 
 
 def gather_perm_checked(out: "SortOutput", what: str) -> np.ndarray:
@@ -324,7 +539,7 @@ def argsort(x, spec: SortSpec | None = None, **overrides) -> np.ndarray:
     Raises if the exchange dropped keys (the result must be exact);
     `on_overflow="retry"`/"spill" recover instead of raising."""
     spec = dataclasses.replace(_as_spec(spec, overrides), stable=True)
-    out = _with_overflow_policy(
+    out = _with_policies(
         lambda s: _sort_impl(x, s, want_indices=True), spec)
     return gather_perm_checked(out, "argsort")
 
@@ -339,7 +554,7 @@ def sort_kv(keys, values, spec: SortSpec | None = None, **overrides):
         raise ValueError(f"values leading dim {values.shape[:1]} != "
                          f"keys shape {keys.shape}")
     spec = dataclasses.replace(_as_spec(spec, overrides), stable=True)
-    out = _with_overflow_policy(
+    out = _with_policies(
         lambda s: _sort_impl(keys, s, want_indices=True), spec)
     order = gather_perm_checked(out, "sort_kv")
     return out.gather(), values[order]

@@ -21,6 +21,10 @@ ALGORITHMS = ("hss", "sample_random", "sample_regular", "ams", "multistage")
 
 ON_OVERFLOW = ("raise", "retry", "spill")
 
+VERIFY = ("off", "cheap", "full")
+
+ON_VERIFY_FAILURE = ("raise", "retry", "fallback")
+
 
 @dataclasses.dataclass(frozen=True)
 class SortSpec:
@@ -64,6 +68,36 @@ class SortSpec:
       capacity_scale uniform static-buffer multiplier (pair/out/sample
                      caps). Callers normally leave this at 1.0; the retry
                      policy sweeps it 2, 4, 8, ... internally.
+
+    Verification policy (DESIGN.md Section 9):
+      verify         device-side postcondition audit fused into the launch
+                     (repro.sort.verify). "off" (default): no audit, zero
+                     cost. "cheap": 2-lane (64-bit) multiset fingerprint
+                     input-vs-output + per-shard sortedness + cross-shard
+                     boundary/range checks + count conservation, one extra
+                     fused psum and one ppermute, one host sync per launch
+                     to judge the verdict. "full": same audit with 4
+                     fingerprint lanes (128 bits).
+      on_verify_failure  what a failed audit does. "raise": typed
+                     VerificationError (BatchVerificationError on the
+                     batched path, carrying per-row verdicts so serving
+                     can fail only corrupted rows). "retry": re-run once —
+                     transient corruption recovers — then escalate to the
+                     fallback configuration before raising. "fallback":
+                     re-run directly on the maximally-conservative path
+                     (spill-channel exchange + kernel_policy="xla"),
+                     raising only if even that fails its audit. Attempts
+                     are recorded on `RecoveryStats`.
+      imbalance_slo  partition-quality SLO: when set, `sort()` enforces
+                     achieved_imbalance = max_shard_load / (N/p) <= this
+                     bound host-side (counts are materialized by the
+                     verdict/gather anyway). Exceeded, it auto-recovers —
+                     duplicate tagging first (duplicate pileups are the
+                     usual cause), then bonus refinement (doubled
+                     splitter sampling/rounds) — and raises a typed
+                     ImbalanceError only when both fail. None: record
+                     achieved_imbalance (whenever verify != "off") but
+                     never enforce. Typical value: 1 + eps.
 
     Placement:
       mesh           jax Mesh to sort over (None => 1-D mesh over all devices).
@@ -123,6 +157,10 @@ class SortSpec:
     on_overflow: str = "raise"
     max_overflow_retries: int = 3
     capacity_scale: float = 1.0
+    # verification policy
+    verify: str = "off"
+    on_verify_failure: str = "raise"
+    imbalance_slo: float | None = None
     # placement
     mesh: Any = None
     axis_name: str = "sort"
@@ -143,6 +181,17 @@ class SortSpec:
             raise ValueError(
                 f"on_overflow must be one of {ON_OVERFLOW}, "
                 f"got {self.on_overflow!r}")
+        if self.verify not in VERIFY:
+            raise ValueError(
+                f"verify must be one of {VERIFY}, got {self.verify!r}")
+        if self.on_verify_failure not in ON_VERIFY_FAILURE:
+            raise ValueError(
+                f"on_verify_failure must be one of {ON_VERIFY_FAILURE}, "
+                f"got {self.on_verify_failure!r}")
+        if self.imbalance_slo is not None and self.imbalance_slo < 1.0:
+            raise ValueError(
+                f"imbalance_slo is max_shard_load/(N/p), necessarily >= 1; "
+                f"got {self.imbalance_slo!r}")
 
     def resolved_exchange(self) -> str:
         """The exchange strategy after the overflow policy is applied:

@@ -37,3 +37,26 @@ def test_hss_all_paper_distributions(name):
     np.testing.assert_array_equal(out_keys, np.sort(keys))
     # (1+eps) balance even for AllZeros — the point of tagging
     assert np.all(np.asarray(res.counts) <= (1 + 0.05) * N / P + 1)
+
+
+def test_adversarial_generators_shapes_and_envelope():
+    from repro.data.distributions import ADVERSARIAL, make_adversarial
+    n = 4096
+    for name in sorted(ADVERSARIAL):
+        x = make_adversarial(name, n, seed=1)
+        assert x.shape == (n,)
+        if name == "DTYPE_EXTREME":
+            assert x.dtype == np.int32
+            assert x.min() == np.iinfo(np.int32).min
+            assert x.max() == np.iinfo(np.int32).max
+        else:
+            # everyone else stays inside the tagging envelope
+            assert x.dtype == np.int32
+            assert x.min() >= 0 and int(x.max()) < 2 ** 30
+    assert np.unique(make_adversarial("ALL_EQUAL", n)).size == 1
+    assert np.all(np.diff(make_adversarial("PRESORTED", n)) >= 0)
+    assert np.all(np.diff(make_adversarial("REVERSE", n)) <= 0)
+    f = make_adversarial("DTYPE_EXTREME", n, dtype=np.float32)
+    assert f.dtype == np.float32
+    assert np.any(np.signbit(f) & (f == 0.0))    # -0.0 present
+    assert np.any(~np.signbit(f) & (f == 0.0))   # +0.0 present

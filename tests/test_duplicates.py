@@ -48,3 +48,13 @@ def test_tagging_order_is_key_major(rng):
                                key_bits=10))
     order = np.argsort(t)
     assert np.all(np.diff(keys[order]) >= 0)  # sorting tags sorts keys
+
+
+def test_float_corner_encodings_totally_ordered():
+    # the DTYPE_EXTREME corners (float min, -1, -0.0, +0.0, 1, max) get
+    # strictly increasing sortable-int encodings — the total order the
+    # verified-sort dtype tests rely on
+    corners = np.array([np.finfo(np.float32).min, -1.0, -0.0, 0.0, 1.0,
+                        np.finfo(np.float32).max], np.float32)
+    s = np.asarray(float32_to_sortable_int32(jnp.asarray(corners)))
+    assert np.all(np.diff(s.astype(np.int64)) > 0)

@@ -79,3 +79,34 @@ def test_interval_union_matches_bruteforce(seed, m):
     for a, b in zip(lo, hi):
         cover[a:b] = True
     assert got == int(cover.sum())
+
+
+# I7: the audit's multiset fingerprint (DESIGN.md Section 9) — lanes are
+# equal iff the multisets are equal (equality direction exact; the
+# inequality direction holds with prob ~1 - 2^-32L, so a drawn
+# counterexample would be a genuine lane-collision bug, not flake)
+@st.composite
+def multiset_pairs(draw):
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 16)))
+    n = draw(st.sampled_from([3, 64, 511]))
+    x = rng.integers(-2 ** 31, 2 ** 31, size=n).astype(np.int32)
+    same = draw(st.booleans())
+    if same:
+        y = rng.permutation(x)
+    else:
+        y = x.copy()
+        y[int(draw(st.integers(0, n - 1)))] ^= np.int32(
+            1 << draw(st.integers(0, 30)))
+        rng.shuffle(y)
+    return x, y, same
+
+
+@given(multiset_pairs(), st.sampled_from([2, 4]))
+@settings(max_examples=40, deadline=None)
+def test_fingerprint_iff_multiset(pair, n_lanes):
+    from repro.sort.verify import fingerprint_lanes
+    x, y, same = pair
+    fx = np.asarray(fingerprint_lanes(jnp.asarray(x), n_lanes))
+    fy = np.asarray(fingerprint_lanes(jnp.asarray(y), n_lanes))
+    assert same == (np.array_equal(np.sort(x), np.sort(y)))
+    assert np.array_equal(fx, fy) == same

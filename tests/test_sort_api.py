@@ -222,3 +222,60 @@ def test_grouping_counting_dispatch(rng):
         src = np.asarray(order)[in_bin]
         assert np.all(ids_np[src] == g)
         assert np.all(np.diff(src) > 0)   # stable: input order preserved
+
+
+# -- dtype edge cases through the device-side audit (DESIGN.md Section 9) --
+
+@pytest.mark.parametrize("algo", sorted(ALGO_SPECS))
+def test_int_extremes_audited_end_to_end(algo):
+    # INT32 min/max clusters: max collides with the untagged sentinel, so
+    # the adapter forces tagging (int64 packing under x64) — and the full
+    # audit must still pass on every partitioner
+    from jax.experimental import enable_x64
+    from repro.data.distributions import make_adversarial
+    n = 8 * 256
+    x = make_adversarial("DTYPE_EXTREME", n, seed=2, dtype=np.int32)
+    with enable_x64():
+        out = sort(jnp.asarray(x),
+                   SortSpec(algorithm=algo, exchange="allgather",
+                            verify="full", **ALGO_SPECS[algo]))
+        assert out.audit is not None and out.audit.ok
+        np.testing.assert_array_equal(out.gather(), np.sort(x))
+
+
+@pytest.mark.parametrize("algo", sorted(ALGO_SPECS))
+def test_signed_zero_total_order_audited(rng, algo):
+    n = 8 * 256
+    x = rng.standard_normal(n).astype(np.float32)
+    x[:32] = -0.0
+    x[32:64] = 0.0
+    rng.shuffle(x)
+    out = sort(jnp.asarray(x),
+               SortSpec(algorithm=algo, exchange="allgather",
+                        verify="full", **ALGO_SPECS[algo]))
+    assert out.audit is not None and out.audit.ok
+    g = out.gather()
+    np.testing.assert_array_equal(g, np.sort(x))
+    # the bijection's total order: every -0.0 sorts strictly before +0.0
+    zeros = g[g == 0.0]
+    assert zeros.size == 64
+    assert np.all(np.diff(np.signbit(zeros).astype(np.int8)) <= 0)
+
+
+@pytest.mark.parametrize("algo", sorted(ALGO_SPECS))
+def test_nan_payload_sort_kv_audited(rng, algo):
+    # NaN keys ride sort_kv with their payloads intact: the bijection
+    # orders them after +inf (numpy's NaN-last), tagging keeps the
+    # permutation stable, and the kv audit fingerprints key AND value
+    from jax.experimental import enable_x64
+    n = 8 * 256
+    keys = rng.standard_normal(n).astype(np.float32)
+    keys[rng.permutation(n)[:48]] = np.float32(np.nan)
+    values = np.arange(n, dtype=np.float32)
+    with enable_x64():   # negative floats span the int32 packing budget
+        k, v = sort_kv(jnp.asarray(keys), values,
+                       SortSpec(algorithm=algo, exchange="allgather",
+                                verify="full", **ALGO_SPECS[algo]))
+    ref = np.argsort(keys, kind="stable")
+    np.testing.assert_array_equal(k, keys[ref])
+    np.testing.assert_array_equal(v, values[ref])
