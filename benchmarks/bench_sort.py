@@ -17,6 +17,16 @@ root, committed as the perf trajectory and uploaded by CI):
                           the percent overhead vs the unaudited row
                           (acceptance: cheap < 10% on the warm batched
                           path). Report-only, like every row here.
+  sort/semisort_*         grouping front doors (DESIGN.md Section 10): warm
+                          `semisort()` vs warm `sort()` (default tag=None
+                          auto-detection — what a grouping caller would
+                          otherwise pay) on ZIPF_HH and ALL_EQUAL keys; the
+                          derived field carries the speedup (acceptance:
+                          semisort wins both rows).
+  sort/topk_pruned        warm `top_k(x, 100)`; derived carries the pruning
+                          ratio 1 - p*c/N — the fraction of keys that never
+                          reach the wire (no all_to_all at all; one (p, c)
+                          all_gather).
 """
 from __future__ import annotations
 
@@ -101,4 +111,32 @@ def run():
                            f"{over:.1f}%")
             rows.append((f"sort/verify_{tier}_{mode}", round(us, 1),
                          derived))
+
+    # grouping front doors (DESIGN.md Section 10). The sort() opponent uses
+    # the DEFAULT spec (tag=None): on these duplicate-heavy keys it
+    # auto-detects and pays the tagged pipeline — exactly what a grouping
+    # caller would pay without semisort. semisort routes heavies around the
+    # exchange instead.
+    from repro.core.common import round_up
+    from repro.sort import semisort, top_k
+    gspec = SortSpec(exchange="allgather")
+    heavy = rng.choice([3, 11, 42, 100], size=N, p=[.4, .25, .15, .2])
+    light = rng.integers(200, 5000, size=N)
+    zipf = np.where(rng.random(N) < 0.85, heavy, light).astype(np.int32)
+    for name, keys in (("zipf_hh", zipf),
+                       ("all_equal", np.full(N, 7, np.int32))):
+        x = jnp.asarray(keys)
+        us_sort = timeit(lambda v: sort(v, gspec).shards, x)
+        us_semi = timeit(lambda v: semisort(v, spec=gspec).light.shards, x)
+        rows.append((f"sort/semisort_{name}", round(us_semi, 1),
+                     f"vs sort()={us_sort:.1f}us; speedup="
+                     f"{us_sort / max(us_semi, 1e-9):.2f}x"))
+
+    k = 100
+    p = jax.device_count()
+    c = min(N // p, round_up(k, 8))
+    us_topk = timeit(lambda v: top_k(v, k, spec=gspec), xs_dev[0])
+    rows.append(("sort/topk_pruned", round(us_topk, 1),
+                 f"k={k} n={N}; gathered p*c={p * c} keys; "
+                 f"pruning_ratio={1 - p * c / N:.3f}"))
     return rows

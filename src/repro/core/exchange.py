@@ -58,6 +58,7 @@ class ExchangeConfig:
     out_slack: float = 1.0        # extra slack on the (1+eps) output capacity
     capacity_scale: float = 1.0   # overflow-retry escalation multiplier
     kernel_policy: str = "auto"   # post-exchange merge backend (dispatch)
+    out_extra: int = 0            # additive output headroom (semisort lights)
 
     def pair_cap(self, n_local: int, p: int) -> int:
         # The chaos clamp (fault injection) applies to the BASE capacity;
@@ -69,9 +70,12 @@ class ExchangeConfig:
         return min(n_local, round_up(max(1, int(base * self.capacity_scale)), 8))
 
     def out_cap(self, n_local: int, p: int, eps: float) -> int:
+        # out_extra is additive headroom on top of the multiplicative slack:
+        # the semisort light path uses it for classes just under the heavy
+        # detection threshold, which cannot be split across splitters.
         return round_up(
             int((1.0 + eps) * self.out_slack * self.capacity_scale * n_local)
-            + 8, 8)
+            + self.out_extra + 8, 8)
 
     def ragged_slot(self, n_local: int, p: int, eps: float) -> int:
         """Static per-run capacity of the ragged merge tree: double the

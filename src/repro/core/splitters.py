@@ -375,3 +375,28 @@ def hss_splitters_batched(
                             1 + jnp.argmax(all_sat, axis=0), jnp.int32(k))
     stats = SplitterStats(gam, cnt, ovf, nsat, rounds_used)
     return keys, ranks, stats
+
+
+def heavy_candidates(sample_sorted: jax.Array, *, max_heavy: int,
+                     min_count: int) -> jax.Array:
+    """Heavy-hitter candidates from a sorted, sentinel-padded sample buffer.
+
+    A key is a candidate when its sample run length reaches `min_count`
+    (the semisort heavy/light split: a key sampled that often has, w.h.p.,
+    global frequency above the detection threshold). Returns a (max_heavy,)
+    ascending buffer of distinct candidate keys, hi-sentinel padded; the
+    hi-sentinel pad values of the sample itself are never candidates.
+
+    Pure shard-local math over replicated inputs — callers gather the
+    per-shard sample buffers first, so every shard computes the identical
+    candidate set (the replication invariant the exchange seam relies on).
+    """
+    sent = hi_sentinel(sample_sorted.dtype)
+    idx = jnp.arange(sample_sorted.shape[0], dtype=jnp.int32)
+    ll = jnp.searchsorted(sample_sorted, sample_sorted, side="left")
+    rr = jnp.searchsorted(sample_sorted, sample_sorted, side="right")
+    is_head = ((idx == ll.astype(jnp.int32))
+               & ((rr - ll) >= min_count)
+               & (sample_sorted != sent))
+    compact = jnp.sort(jnp.where(is_head, sample_sorted, sent))
+    return compact[:max_heavy]

@@ -3,11 +3,13 @@
 Token dispatch IS the paper's problem (DESIGN.md Section 4.1): partition T
 tokens across expert shards under a static (1+eps) capacity. The dispatch is
 an explicit shard_map so the all-to-all is exactly the capacity-padded dense
-exchange from repro.core.exchange — sort assignments by destination shard
-via the shared sort-based dispatch in repro.sort.grouping, pack
-per-destination capacity slots, one fused all_to_all, grouped-GEMM locally,
-reverse all_to_all, weighted combine at the source. Dropped (over-capacity)
-assignments are counted and returned.
+exchange from repro.core.exchange — group assignments by destination shard
+via the shared semisort-style dispatch in repro.sort.grouping (a stable
+counting sort since the semisort migration; bit-identical to the old stable
+argsort because the only invalid id here is -1 — pinned by the regression
+tests in tests/test_duplicates.py), pack per-destination capacity slots, one
+fused all_to_all, grouped-GEMM locally, reverse all_to_all, weighted combine
+at the source. Dropped (over-capacity) assignments are counted and returned.
 
 Two static paths:
   big-T   (train/prefill): tokens context-sharded over the TP axis; a2a moves

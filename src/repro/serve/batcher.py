@@ -33,7 +33,8 @@ class Request:
     requests are dropped from the batch at dispatch, resolved with
     DeadlineExceeded, and never poison the surviving requests.
     """
-    kind: str                  # "sort" | "argsort" | "sort_kv"
+    kind: str                  # "sort" | "argsort" | "sort_kv" |
+    #                            "semisort" | "top_k"
     x: Any                     # 1-D key array (host or device)
     values: Any                # sort_kv payload, else None
     spec: Any                  # SortSpec (argsort/sort_kv: already stable)
@@ -41,6 +42,7 @@ class Request:
     future: asyncio.Future
     t_submit: float            # loop.time() at admission
     deadline: float | None = None
+    param: Any = None          # kind-specific scalar (top_k: the k)
 
 
 class DynamicBatcher:

@@ -9,6 +9,9 @@ Endpoints (JSON in, JSON out):
                      "spec": {"algorithm": "hss", ...}}  -> {"sorted": [...]}
   POST /v1/argsort  same body                        -> {"indices": [...]}
   POST /v1/sort_kv  + "values": [...]          -> {"keys": ..., "values": ...}
+  POST /v1/semisort same body as /v1/sort      -> {"grouped": [...]}
+                    (equal keys contiguous; no total-order promise)
+  POST /v1/top_k    + "k": 10          -> {"top": [...]} (descending, len k)
   GET  /metrics     MetricsRegistry snapshot (per-bucket + exec-cache)
   POST /metrics/reset
   GET  /healthz     breaker-board health: {"health": "ok"|"degraded"|
@@ -62,7 +65,8 @@ SPEC_FIELDS = ("algorithm", "eps", "rounds", "sample_per_shard", "adaptive",
                "stable", "tag", "seed", "kernel_policy")
 
 _ROUTES = {"/v1/sort": "sort", "/v1/argsort": "argsort",
-           "/v1/sort_kv": "sort_kv"}
+           "/v1/sort_kv": "sort_kv", "/v1/semisort": "semisort",
+           "/v1/top_k": "top_k"}
 
 
 class BadRequest(ValueError):
@@ -152,8 +156,13 @@ def make_handler(runner: ServiceRunner, *, verbose: bool = False):
                 values = None
                 if kind == "sort_kv":
                     values = np.asarray(body.get("values"))
+                param = None
+                if kind == "top_k":
+                    param = body.get("k")
+                    if not isinstance(param, int):
+                        raise BadRequest("'k' must be an integer")
                 result = runner.submit(
-                    x, kind=kind, values=values, spec=spec,
+                    x, kind=kind, values=values, spec=spec, param=param,
                     timeout=None if timeout_ms is None else timeout_ms / 1e3)
             except (BadRequest, ValueError, json.JSONDecodeError) as e:
                 self._reply(400, {"error": str(e)})
@@ -174,6 +183,10 @@ def make_handler(runner: ServiceRunner, *, verbose: bool = False):
                     self._reply(200, {"sorted": result.tolist()})
                 elif kind == "argsort":
                     self._reply(200, {"indices": result.tolist()})
+                elif kind == "semisort":
+                    self._reply(200, {"grouped": result.tolist()})
+                elif kind == "top_k":
+                    self._reply(200, {"top": result.tolist()})
                 else:
                     k, v = result
                     self._reply(200, {"keys": k.tolist(),

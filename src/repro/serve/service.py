@@ -67,12 +67,13 @@ from repro.serve.breaker import BreakerBoard
 from repro.serve.errors import DeadlineExceeded, Overloaded, ServiceClosed
 from repro.serve.metrics import MetricsRegistry
 from repro.sort import (BatchVerificationError, SortSpec, VerificationError,
-                        bucket_key, gather_perm_checked, sort_batched)
+                        bucket_key, gather_perm_checked, semisort,
+                        semisort_batched, sort_batched, top_k, top_k_batched)
 from repro.sort import argsort as sort_argsort
 from repro.sort import driver as sort_driver
 from repro.sort import sort as sort_single
 
-KINDS = ("sort", "argsort", "sort_kv")
+KINDS = ("sort", "argsort", "sort_kv", "semisort", "top_k")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -177,7 +178,7 @@ class SortService:
     # -- submission --------------------------------------------------------
 
     def enqueue(self, x, *, kind: str = "sort", values=None,
-                spec: SortSpec | None = None,
+                spec: SortSpec | None = None, param=None,
                 timeout: float | None = None) -> asyncio.Future:
         """Admit one request; returns its asyncio future. Must be called
         on the service's event loop. Raises ServiceClosed / Overloaded
@@ -217,13 +218,21 @@ class SortService:
             if values.shape[:1] != x.shape:
                 raise ValueError(
                     f"values leading dim {values.shape[:1]} != {x.shape}")
+        if kind == "top_k":
+            param = int(param) if param is not None else None
+            if param is None or not 1 <= param <= x.shape[0]:
+                raise ValueError(
+                    f"top_k requires 1 <= k <= {x.shape[0]}, got {param!r}")
+        else:
+            param = None    # only top_k carries a launch-shaping param
         timeout = (timeout if timeout is not None
                    else self.config.default_timeout_s)
         req = Request(
             kind=kind, x=x, values=values, spec=spec,
-            key=bucket_key(x.shape[0], x.dtype, spec, kind=kind),
+            key=bucket_key(x.shape[0], x.dtype, spec, kind=kind, param=param),
             future=loop.create_future(), t_submit=loop.time(),
-            deadline=None if timeout is None else loop.time() + timeout)
+            deadline=None if timeout is None else loop.time() + timeout,
+            param=param)
         self._queued += 1
         self._outstanding += 1
         self._idle.clear()
@@ -232,15 +241,17 @@ class SortService:
         return req.future
 
     async def submit(self, x, *, kind: str = "sort", values=None,
-                     spec: SortSpec | None = None,
+                     spec: SortSpec | None = None, param=None,
                      timeout: float | None = None):
         """Admit one request and await its result: the sorted keys
-        (`kind="sort"`), the stable argsort permutation ("argsort"), or a
-        `(sorted_keys, permuted_values)` pair ("sort_kv") — each a NumPy
-        array, bit-identical to the corresponding direct `repro.sort`
-        call with the same spec/seed."""
+        (`kind="sort"`), the stable argsort permutation ("argsort"), a
+        `(sorted_keys, permuted_values)` pair ("sort_kv"), the grouped
+        keys ("semisort" — equal keys contiguous, no total order
+        promise), or the largest `param` keys descending ("top_k") —
+        each a NumPy array, bit-identical to the corresponding direct
+        `repro.sort` call with the same spec/seed."""
         return await self.enqueue(x, kind=kind, values=values, spec=spec,
-                                  timeout=timeout)
+                                  param=param, timeout=timeout)
 
     # -- batch lifecycle ---------------------------------------------------
 
@@ -404,6 +415,10 @@ class SortService:
         x = jnp.asarray(req.x)
         if req.kind == "sort":
             return sort_single(x, spec).gather()
+        if req.kind == "semisort":
+            return semisort(x, spec=spec).gather()
+        if req.kind == "top_k":
+            return np.asarray(top_k(x, req.param, spec=spec))
         order = np.asarray(sort_argsort(x, spec))
         if req.kind == "argsort":
             return order
@@ -432,10 +447,20 @@ class SortService:
                     [xs, np.broadcast_to(xs[-1], (b_pad - b_real,) + xs[-1].shape)])
         stats0 = sort_driver.exec_cache.stats()
         verify_err = None
+        row_ok = None
         try:
-            out = sort_batched(jnp.asarray(xs), spec)
-            row_ok = None
+            if kind == "top_k":
+                out = top_k_batched(jnp.asarray(xs), reqs[0].param, spec=spec)
+            elif kind == "semisort":
+                out = semisort_batched(jnp.asarray(xs), spec=spec)
+            else:
+                out = sort_batched(jnp.asarray(xs), spec)
         except BatchVerificationError as e:
+            # sort kinds only: semisort/top_k don't wrap the device audit
+            # (DESIGN.md Section 10), so they can't raise this here — a
+            # tagged-fallback semisort batch that does surfaces a
+            # BatchedSortOutput, whose request(b).gather() below is still
+            # a valid (fully sorted) grouping.
             verify_err, out = e, e.output
             row_ok = e.row_ok
         self.metrics.observe_recovery(
@@ -448,6 +473,12 @@ class SortService:
                 results.append(VerificationError(
                     f"request failed the device-side audit: {verify_err}",
                     verify_err.report.row(b)))
+                continue
+            if kind == "top_k":
+                results.append(np.asarray(out[b]))
+                continue
+            if kind == "semisort":
+                results.append(out.request(b).gather())
                 continue
             r = out.request(b)
             if kind == "sort":
@@ -540,12 +571,13 @@ class ServiceRunner:
         self.service = SortService(spec=spec, config=config)
 
     def submit(self, x, *, kind: str = "sort", values=None,
-               spec: SortSpec | None = None, timeout: float | None = None):
+               spec: SortSpec | None = None, param=None,
+               timeout: float | None = None):
         """Blocking submit from any thread; raises the service's typed
         errors (Overloaded / DeadlineExceeded / ServiceClosed)."""
         fut = asyncio.run_coroutine_threadsafe(
             self.service.submit(x, kind=kind, values=values, spec=spec,
-                                timeout=timeout), self._loop)
+                                param=param, timeout=timeout), self._loop)
         return fut.result()
 
     def metrics(self) -> dict:

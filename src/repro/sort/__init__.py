@@ -14,6 +14,12 @@ Algorithms (see repro.sort.partitioners): "hss" (the paper), the
 dtype/duplicate adapters in repro.sort.adapters; device-level dispatch
 helpers (MoE) in repro.sort.grouping.
 
+Grouping workloads (DESIGN.md Section 10): `semisort(keys)` makes equal
+keys contiguous without paying for a total order (heavy hitters bypass the
+exchange entirely), `groupby_aggregate(keys, values, op=...)` aggregates
+per distinct key, and `top_k(keys, k)` prunes below-threshold keys on each
+shard BEFORE any exchange — see repro.sort.semisort.
+
 Batched serving: `sort_batched(xs)` sorts B independent requests in ONE
 shard_map launch with batch-fused collectives and a compiled-executable
 cache (`exec_cache`) keyed by shape bucket — see DESIGN.md Section 6:
@@ -36,6 +42,9 @@ from repro.sort.api import (
     RecoveryStats, argsort, bucket_key, gather, gather_perm_checked, sort,
     sort_batched, sort_kv, spec_fingerprint)
 from repro.sort.driver import exec_cache
+from repro.sort.semisort import (
+    GROUPBY_OPS, BatchedSemisortOutput, SemisortOutput, groupby_aggregate,
+    semisort, semisort_batched, top_k, top_k_batched)
 from repro.sort.partitioners import (
     Partitioner, ShardCtx, available_algorithms, get_partitioner,
     register_partitioner)
@@ -46,10 +55,12 @@ from repro.sort.verify import (AuditReport, BatchVerificationError,
 
 __all__ = [
     "ALGORITHMS", "AuditReport", "BatchVerificationError",
-    "BatchedSortOutput", "ImbalanceError", "ON_OVERFLOW",
-    "ON_VERIFY_FAILURE", "Partitioner", "RecoveryStats", "ShardCtx",
-    "SortOutput", "SortSpec", "VERIFY", "VerificationError", "argsort",
-    "available_algorithms", "bucket_key", "exec_cache", "gather",
-    "gather_perm_checked", "get_partitioner", "register_partitioner",
-    "sort", "sort_batched", "sort_kv", "spec_fingerprint",
+    "BatchedSemisortOutput", "BatchedSortOutput", "GROUPBY_OPS",
+    "ImbalanceError", "ON_OVERFLOW", "ON_VERIFY_FAILURE", "Partitioner",
+    "RecoveryStats", "SemisortOutput", "ShardCtx", "SortOutput", "SortSpec",
+    "VERIFY", "VerificationError", "argsort", "available_algorithms",
+    "bucket_key", "exec_cache", "gather", "gather_perm_checked",
+    "get_partitioner", "groupby_aggregate", "register_partitioner",
+    "semisort", "semisort_batched", "sort", "sort_batched", "sort_kv",
+    "spec_fingerprint", "top_k", "top_k_batched",
 ]

@@ -106,6 +106,7 @@ def _spec_trace_fields(spec: SortSpec) -> tuple:
             spec.adaptive, spec.total_sample, spec.s,
             spec.resolved_exchange(), spec.pair_factor, spec.out_slack,
             spec.capacity_scale, spec.kernel_policy, spec.verify,
+            spec.semisort_sample, spec.heavy_fraction,
             chaos.trace_token())
 
 
@@ -124,7 +125,7 @@ def spec_fingerprint(spec: SortSpec):
         spec.imbalance_slo, _mesh_fingerprint(spec))
 
 
-def bucket_key(n, dtype, spec: SortSpec, *, kind: str = "sort"):
+def bucket_key(n, dtype, spec: SortSpec, *, kind: str = "sort", param=None):
     """Serving-batch grouping key (repro.serve): requests that share it
     can stack into one `sort_batched` launch — same length, key dtype,
     request kind, and full spec fingerprint — and therefore share one
@@ -133,11 +134,17 @@ def bucket_key(n, dtype, spec: SortSpec, *, kind: str = "sort"):
     hashes the *encoded* array shape/dtype, which is only known once a
     batch's adapter plan is built, so the batcher groups on everything
     known pre-encoding. Opaque specs (local_sort_fn / initial_probes)
-    bucket by object identity: they never share a batch."""
+    bucket by object identity: they never share a batch.
+
+    `param` carries a kind-specific scalar that shapes the launch (the k
+    of a `top_k` request): requests with different k must not stack.
+    None (every other kind) leaves the key shape unchanged, so existing
+    buckets and any persisted key fingerprints are unaffected."""
     fp = spec_fingerprint(spec)
     if fp is None:
         fp = ("opaque", id(spec))
-    return (kind, int(n), str(jnp.dtype(dtype)), fp)
+    key = (kind, int(n), str(jnp.dtype(dtype)), fp)
+    return key if param is None else key + (param,)
 
 
 def _cache_key(spec: SortSpec, names, sizes, enc, *, batched: bool):

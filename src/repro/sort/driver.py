@@ -40,7 +40,7 @@ import jax.random as jr
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core.common import hi_sentinel
+from repro.core.common import hi_sentinel, lo_sentinel
 from repro.parallel.compat import shard_map
 
 
@@ -200,6 +200,20 @@ def pad_to_shards(x: jax.Array, p: int):
         return x, 0
     pad = jnp.full((n_pad,), hi_sentinel(x.dtype), x.dtype)
     return jnp.concatenate([x, pad]), n_pad
+
+
+def pad_to_shards_lo(x: jax.Array, p: int):
+    """LO-sentinel counterpart of `pad_to_shards` for max-seeking paths
+    (repro.sort.semisort.top_k): pads must never displace real keys from
+    the top of the order, so they enter as the globally *smallest* value.
+    A pad colliding with a real dtype-min key is harmless for values-only
+    top-k — the outputs are identical by value."""
+    n = x.shape[0]
+    n_pad = (-n) % p
+    if n_pad == 0:
+        return x, 0
+    pad = jnp.full((n_pad,), lo_sentinel(x.dtype), x.dtype)
+    return jnp.concatenate([pad, x]), n_pad
 
 
 def strip_sentinel_counts(shards, counts, n_pad=0, n_restore=None):

@@ -2,15 +2,24 @@
 
 MoE token dispatch is the paper's partitioning problem at micro scale: N
 items carrying small destination ids must be placed into per-destination
-capacity bins. The repo's MoE layer does this with a stable argsort by
-destination followed by slot assignment — the same sort-based dispatch the
-`repro.sort` front-door exposes at cluster scale, shrunk to one shard's
-registers. These helpers are shard_map-resident (pure jnp, no collectives)
-so `repro.models.moe` and any future dispatch path share one implementation.
+capacity bins. The repo's MoE layer historically did this with a stable
+argsort by destination followed by slot assignment; since the semisort PR
+(DESIGN.md Section 10) the default dispatch is `grouping_permutation` — a
+stable counting sort, which is exactly the device-level semisort special
+case where EVERY key is a known heavy hitter over a tiny id domain, so no
+comparison sort is needed at all. The legacy argsort path remains as
+`method="argsort"` (and `DEFAULT_DISPATCH_METHOD` flips the default) so
+the bit-identity regression tests can compare both. These helpers are
+shard_map-resident (pure jnp, no collectives) so `repro.models.moe` and
+any future dispatch path share one implementation.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
+
+# Default `counting_dispatch` method. The MoE bit-identity tests monkeypatch
+# this to "argsort" to regenerate pre-migration reference outputs.
+DEFAULT_DISPATCH_METHOD = "counting"
 
 
 def group_by_length(seqs, *, multiple: int = 1, max_groups: int = 0) -> dict:
@@ -88,17 +97,79 @@ def group_slots(sorted_group_ids, n_groups: int, capacity: int):
     return jnp.where(keep, slot, n_groups * capacity), keep
 
 
-def counting_dispatch(group_ids, n_groups: int, capacity: int):
-    """Stable sort-based dispatch of items into per-group capacity bins.
+def _class_ranks(group_ids, n_groups: int):
+    """Stable counting-sort bookkeeping over classes {-1} + [0, n_groups):
+    invalid ids (outside [0, n_groups)) collapse to class -1. Returns
+    (cls, rank, pos): each item's class, its 0-based stable rank within
+    the class, and its position in the grouped (class-major, input-order
+    within class) permutation."""
+    n = group_ids.shape[0]
+    valid = (group_ids >= 0) & (group_ids < n_groups)
+    cls = jnp.where(valid, group_ids, -1).astype(jnp.int32)
+    onehot = cls[:, None] == jnp.arange(-1, n_groups, dtype=jnp.int32)[None]
+    rank = jnp.sum(jnp.where(onehot, jnp.cumsum(onehot, axis=0) - 1, 0),
+                   axis=1).astype(jnp.int32)
+    sizes = jnp.sum(onehot, axis=0).astype(jnp.int32)
+    starts = jnp.cumsum(sizes) - sizes
+    pos = starts[cls + 1] + rank
+    return cls, rank, pos
+
+
+def grouping_permutation(group_ids, n_groups: int):
+    """Stable grouping permutation by counting sort — the device-level
+    semisort: every id in the tiny [0, n_groups) domain is a known heavy
+    hitter, so within-class ranks come from a one-hot cumsum and no
+    comparison sort runs. Invalid ids group at the front in input order.
+    Identical to `jnp.argsort(group_ids, stable=True)` whenever the
+    invalid ids are all equal and negative (the MoE dispatch case, where
+    the only invalid id is -1)."""
+    n = group_ids.shape[0]
+    _, _, pos = _class_ranks(group_ids, n_groups)
+    return jnp.zeros((n,), jnp.int32).at[pos].set(
+        jnp.arange(n, dtype=jnp.int32))
+
+
+def counting_dispatch(group_ids, n_groups: int, capacity: int,
+                      method: str | None = None):
+    """Stable dispatch of items into per-group capacity bins.
 
     group_ids: (n,) int32 destination ids; ids outside [0, n_groups) are
     dropped (keep == False). Returns (order, slot, keep) where `order` is
-    the stable argsort by destination (ties keep input order — exactly the
-    implicit-tagging order of the distributed sort) and slot/keep are
-    `group_slots` of the sorted ids. Scatter pattern:
+    the stable grouping permutation (ties keep input order — exactly the
+    implicit-tagging order of the distributed sort) and slot/keep (indexed
+    by grouped position, like `group_slots` of the ordered ids) place each
+    kept item in [0, n_groups*capacity), overflow/invalid items on the
+    buffer's overflow row. Scatter pattern:
 
         buf = zeros((n_groups*capacity + 1, d)).at[slot].set(rows[order])
+
+    method: "counting" (default via DEFAULT_DISPATCH_METHOD) computes the
+    permutation and slots by stable counting sort — O(n * n_groups) one-hot
+    work, no comparison sort; "argsort" is the legacy
+    `jnp.argsort(stable=True)` path. Both produce bit-identical (order,
+    slot, keep) for MoE-shaped ids (invalid ids all == -1); for arbitrary
+    mixed invalid ids only the relative order *among invalid entries* may
+    differ — and those entries are dropped by `keep` either way.
     """
-    order = jnp.argsort(group_ids, stable=True)
-    slot, keep = group_slots(group_ids[order], n_groups, capacity)
-    return order, slot, keep
+    method = method or DEFAULT_DISPATCH_METHOD
+    if method == "argsort":
+        order = jnp.argsort(group_ids, stable=True)
+        slot, keep = group_slots(group_ids[order], n_groups, capacity)
+        return order, slot, keep
+    if method != "counting":
+        raise ValueError(f"unknown dispatch method {method!r}")
+    n = group_ids.shape[0]
+    cls, rank, pos = _class_ranks(group_ids, n_groups)
+    order = jnp.zeros((n,), jnp.int32).at[pos].set(
+        jnp.arange(n, dtype=jnp.int32))
+    # slot/keep computed per input item (the counting path never needs the
+    # ids *sorted* — group_slots' searchsorted would be undefined when
+    # distinct invalid ids share the front bucket), then carried to the
+    # grouped positions via `order`.
+    keep_i = (cls >= 0) & (rank < capacity)
+    slot_i = jnp.where(
+        keep_i,
+        jnp.clip(cls, 0, n_groups - 1) * capacity
+        + jnp.clip(rank, 0, capacity - 1),
+        n_groups * capacity)
+    return order, slot_i[order], keep_i[order]

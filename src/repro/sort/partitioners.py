@@ -154,6 +154,36 @@ class Partitioner:
             cfg=ctx.ex_cfg, eps=ctx.spec.eps)
         return out, n_valid, keys, ranks, s_ovf + e_ovf, stats
 
+    def partition_sorted(self, local_sorted, rng, ctx: ShardCtx, *,
+                         n_valid=None, ex_cfg=None):
+        """Splitters + exchange over an already-sorted shard — the relaxed
+        seam the semisort light path rides (DESIGN.md Section 10). Unlike
+        `sharded`, the caller owns the local sort and may mask a tail as
+        hi-sentinel padding, passing the real count via `n_valid` so the
+        exchange excludes the pad from the last destination slice. The
+        splitter rounds see the sentinel tail as genuine max keys, which
+        only biases the top splitters upward — grouping (not total order)
+        is the contract here, so that is harmless."""
+        keys, ranks, s_ovf, stats = self.splitters(
+            local_sorted, dataclasses.replace(ctx, rng=rng))
+        out, n_out, e_ovf = exchange(
+            local_sorted, keys, axis_name=ctx.axis_name, p=ctx.p,
+            cfg=ex_cfg if ex_cfg is not None else ctx.ex_cfg,
+            eps=ctx.spec.eps, n_valid=n_valid)
+        return out, n_out, keys, ranks, s_ovf + e_ovf, stats
+
+    def partition_sorted_batched(self, local_sorted, rng, ctx: ShardCtx, *,
+                                 n_valid=None, ex_cfg=None):
+        """Batched `partition_sorted`: (B, n_local) sorted rows, n_valid
+        None | scalar | (B,)."""
+        keys, ranks, s_ovf, stats = self.splitters_batched(
+            local_sorted, dataclasses.replace(ctx, rng=rng))
+        out, n_out, e_ovf = exchange_batched(
+            local_sorted, keys, axis_name=ctx.axis_name, p=ctx.p,
+            cfg=ex_cfg if ex_cfg is not None else ctx.ex_cfg,
+            eps=ctx.spec.eps, n_valid=n_valid)
+        return out, n_out, keys, ranks, s_ovf + e_ovf, stats
+
 
 _REGISTRY: dict[str, Partitioner] = {}
 

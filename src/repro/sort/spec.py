@@ -114,6 +114,16 @@ class SortSpec:
                      exchange regardless of B, plus the compiled-executable
                      cache. `sort_batched` itself ignores this flag.
 
+    Semisort (repro.sort.semisort; DESIGN.md Section 10):
+      semisort_sample   per-shard sample rows for heavy-hitter detection in
+                     `semisort`/`groupby_aggregate`. 0 = auto-size from
+                     (n_local, p). Ignored by `sort()`.
+      heavy_fraction classify a key as heavy when its estimated global
+                     frequency reaches heavy_fraction * N / p — heavy keys
+                     bypass the splitter/exchange path entirely and are
+                     reported as (key, count) aggregates; everything else
+                     rides the light (splitter histogram) path.
+
     Semantics:
       stable         True => implicit duplicate tagging (paper Sec. 6.3) is
                      applied so equal keys keep input order and original
@@ -168,6 +178,9 @@ class SortSpec:
     inner_axis: str = "inner"
     # batched execution
     batch: bool = False
+    # semisort (repro.sort.semisort; DESIGN.md Section 10)
+    semisort_sample: int = 0
+    heavy_fraction: float = 0.5
     # semantics
     stable: bool = False
     tag: bool | None = None
