@@ -4,9 +4,8 @@ from __future__ import annotations
 
 import csv
 import json
-import os
 
-from benchmarks.roofline import summary, terms
+from benchmarks.roofline import summary
 
 
 def main(path="experiments/dryrun.json"):

@@ -1,0 +1,40 @@
+"""Static analysis over the repo's jaxprs: collective-structure proofs,
+host-sync/retrace lints, and VMEM budgets.
+
+The package is the machine-checkable form of the paper's claims: HSS is a
+communication bound (rounds x bytes), so every front-door program carries a
+:class:`repro.analysis.contracts.CommsContract` stating exactly which
+collectives it may issue, and ``python -m repro.analysis.lint`` proves the
+whole program matrix against those contracts in CI.
+
+Modules
+-------
+jaxpr_walk  one shared recursive jaxpr traversal (scan/cond/while/pjit/
+            shard_map bodies), primitive counting, subtree queries
+comms       collective-cost model: every all_gather/all_to_all/psum/ppermute
+            with operand bytes, mesh axes, and scan-trip multipliers
+contracts   declarative CommsContract objects + check_program()
+purity      host-sync (transfer_guard) and exec-cache retrace lints
+vmem        static VMEM budget checker for the Pallas kernel families
+lint        the CLI that sweeps the matrix and emits ANALYSIS.json
+"""
+
+from repro.analysis.jaxpr_walk import (  # noqa: F401
+    as_jaxpr,
+    find_round_scan,
+    find_scan,
+    gather_operand_cols,
+    primitive_counts,
+    sub_jaxprs,
+    walk_eqns,
+)
+from repro.analysis.comms import Collective, CommsReport, analyze  # noqa: F401
+from repro.analysis.contracts import (  # noqa: F401
+    CommsContract,
+    ContractReport,
+    ContractViolation,
+    check_program,
+    get_contract,
+    register_contract,
+    registered_contracts,
+)

@@ -1,0 +1,179 @@
+"""Collective-cost model over jaxprs.
+
+HSS's claim is stated in rounds x bytes; this module extracts both from a
+traced program, before compilation. Every collective equation
+(all_gather / all_to_all / psum / ppermute / ...) is recorded with its
+operand bytes, mesh axes, the static trip count of the scans enclosing it
+(a collective inside the k-round splitter scan costs k rounds, not 1),
+and the nesting path it was found under.
+
+The numbers are *operand* bytes — the cost-model currency the paper uses —
+not wire bytes: all_gather moves ~(p-1)/p of its output, all_to_all
+~(p-1)/p of its operand, psum ~2x operand for a ring reduce-scatter +
+gather. ``CommsReport.render()`` prints the operand-byte table;
+``launch.dryrun.collective_bytes`` remains the post-compilation HLO view.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.analysis.jaxpr_walk import COLLECTIVE_PRIMITIVES, as_jaxpr, sub_jaxprs
+
+__all__ = ["Collective", "CommsReport", "analyze", "analyze_jaxpr"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Collective:
+    """One collective equation in a traced program."""
+
+    primitive: str                    # e.g. "all_gather"
+    shape: Tuple[int, ...]            # operand aval shape
+    dtype: str                        # operand dtype name
+    operand_bytes: int                # nbytes of the (largest) operand
+    axes: Tuple[str, ...]             # mesh axis names it runs over
+    trips: Optional[int]              # product of enclosing scan lengths;
+                                      # None when inside a while (unbounded)
+    path: Tuple[str, ...]             # enclosing higher-order primitives,
+                                      # outermost first (e.g. scan, cond)
+
+    @property
+    def total_bytes(self) -> Optional[int]:
+        """operand_bytes x trips, or None when trips is unbounded."""
+        return None if self.trips is None else self.operand_bytes * self.trips
+
+    def describe(self) -> str:
+        trips = "?" if self.trips is None else str(self.trips)
+        path = "/".join(self.path) or "-"
+        return (f"{self.primitive:16s} {str(self.shape):>18s} {self.dtype:>8s}"
+                f" x{trips:<4s} {_fmt_bytes(self.operand_bytes):>10s}"
+                f"  axes={','.join(self.axes) or '-'}  at {path}")
+
+
+def _eqn_axes(eqn) -> Tuple[str, ...]:
+    for key in ("axis_name", "axis_names", "axes"):
+        v = eqn.params.get(key)
+        if v is None:
+            continue
+        vs = v if isinstance(v, (list, tuple)) else (v,)
+        return tuple(str(a) for a in vs if isinstance(a, (str,)) or a is None)
+    return ()
+
+
+def _operand_bytes(eqn) -> Tuple[Tuple[int, ...], str, int]:
+    """(shape, dtype, nbytes) of the largest array operand of a collective."""
+    best = ((), "?", 0)
+    for var in eqn.invars:
+        aval = getattr(var, "aval", None)
+        shape = tuple(getattr(aval, "shape", ()) or ())
+        dtype = getattr(aval, "dtype", None)
+        if dtype is None:
+            continue
+        nbytes = int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
+        if nbytes >= best[2]:
+            best = (shape, np.dtype(dtype).name, nbytes)
+    return best
+
+
+def _collect(jx, trips: Optional[int], path: Tuple[str, ...], out: list):
+    for eqn in as_jaxpr(jx).eqns:
+        name = eqn.primitive.name
+        if name in COLLECTIVE_PRIMITIVES:
+            shape, dtype, nbytes = _operand_bytes(eqn)
+            out.append(Collective(primitive=name, shape=shape, dtype=dtype,
+                                  operand_bytes=nbytes, axes=_eqn_axes(eqn),
+                                  trips=trips, path=path))
+        subs = list(sub_jaxprs(eqn))
+        if not subs:
+            continue
+        sub_trips = trips
+        if name == "scan":
+            length = eqn.params.get("length")
+            if sub_trips is not None:
+                sub_trips = None if length is None else sub_trips * int(length)
+        elif name == "while":
+            sub_trips = None  # trip count is data-dependent
+        for s in subs:
+            _collect(s, sub_trips, path + (name,), out)
+
+
+@dataclasses.dataclass(frozen=True)
+class CommsReport:
+    """All collectives of one traced program, with rounds/bytes rollups."""
+
+    label: str
+    collectives: Tuple[Collective, ...]
+
+    def counts(self) -> dict:
+        out: dict = {}
+        for c in self.collectives:
+            out[c.primitive] = out.get(c.primitive, 0) + 1
+        return out
+
+    def total_rounds(self) -> Optional[int]:
+        """Collective launches, scan trips included; None if unbounded."""
+        total = 0
+        for c in self.collectives:
+            if c.trips is None:
+                return None
+            total += c.trips
+        return total
+
+    def total_bytes(self) -> Optional[int]:
+        total = 0
+        for c in self.collectives:
+            if c.total_bytes is None:
+                return None
+            total += c.total_bytes
+        return total
+
+    def in_round_scan(self) -> Tuple[Collective, ...]:
+        """Collectives sitting inside a scan (the per-round costs)."""
+        return tuple(c for c in self.collectives if "scan" in c.path)
+
+    def render(self) -> str:
+        lines = [f"collective cost report: {self.label}",
+                 f"  {'primitive':16s} {'operand shape':>18s} {'dtype':>8s}"
+                 f" trips {'bytes':>10s}"]
+        for c in self.collectives:
+            lines.append("  " + c.describe())
+        rounds = self.total_rounds()
+        nbytes = self.total_bytes()
+        lines.append(f"  total: {len(self.collectives)} collective eqns, "
+                     f"{'unbounded' if rounds is None else rounds} rounds, "
+                     f"{'unbounded' if nbytes is None else _fmt_bytes(nbytes)}"
+                     " operand bytes")
+        return "\n".join(lines)
+
+    def to_json(self) -> dict:
+        return {
+            "label": self.label,
+            "counts": self.counts(),
+            "total_rounds": self.total_rounds(),
+            "total_bytes": self.total_bytes(),
+            "collectives": [dataclasses.asdict(c) for c in self.collectives],
+        }
+
+
+def analyze_jaxpr(jx, label: str = "<jaxpr>") -> CommsReport:
+    out: list = []
+    _collect(jx, 1, (), out)
+    return CommsReport(label=label, collectives=tuple(out))
+
+
+def analyze(fn, *args: Any, label: Optional[str] = None) -> CommsReport:
+    """Trace ``fn(*args)`` (args may be ShapeDtypeStructs) and model it."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    return analyze_jaxpr(jaxpr, label=label or getattr(fn, "__name__", "<fn>"))
+
+
+def _fmt_bytes(n: int) -> str:
+    if n >= 1 << 20:
+        return f"{n / (1 << 20):.1f}MiB"
+    if n >= 1 << 10:
+        return f"{n / (1 << 10):.1f}KiB"
+    return f"{n}B"

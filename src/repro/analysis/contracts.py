@@ -1,0 +1,234 @@
+"""Declarative communication contracts, checked against traced programs.
+
+A :class:`CommsContract` states what a front-door program is allowed to do
+on the wire: exact collective counts inside the splitter-round scan, exact
+or bounded totals, forbidden primitives, purity of the early-exit
+converged branch, and pinned all_gather operand widths. Contracts are
+registered next to the code they constrain (partitioners, exchange
+strategies, semisort/top_k) and proved by :func:`check_program` — at trace
+time, before compilation — so a regression in collective structure fails
+lint, not a benchmark.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+
+from repro.analysis import comms, jaxpr_walk
+from repro.analysis.jaxpr_walk import COLLECTIVE_PRIMITIVES
+
+__all__ = [
+    "CommsContract",
+    "ContractViolation",
+    "ContractReport",
+    "check_program",
+    "check_jaxpr",
+    "check_batch_invariance",
+    "register_contract",
+    "get_contract",
+    "registered_contracts",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CommsContract:
+    """What a program may do on the wire. ``None`` fields are unchecked."""
+
+    name: str
+    description: str = ""
+    #: exact primitive counts over the whole program (0 bans a primitive)
+    total_counts: Optional[Mapping[str, int]] = None
+    #: upper bounds on primitive counts over the whole program
+    max_total: Optional[Mapping[str, int]] = None
+    #: primitives that must not appear anywhere
+    forbid: Tuple[str, ...] = ()
+    #: exact primitive counts inside the splitter-round scan body
+    round_collectives: Optional[Mapping[str, int]] = None
+    #: cap on the number of collective eqns inside the round scan body
+    max_round_collectives: Optional[int] = None
+    #: every cond inside the round scan must keep one branch collective-free
+    #: (the early-exit converged branch does no communication)
+    converged_branch_pure: bool = False
+    #: exact all_gather operand last-axis widths, in program order
+    gather_widths: Optional[Tuple[int, ...]] = None
+    #: collective counts that must not change with batch size
+    #: (checked by check_batch_invariance, not check_program)
+    batch_invariant: Tuple[str, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class ContractViolation:
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"[{self.rule}] {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class ContractReport:
+    contract: str
+    ok: bool
+    violations: Tuple[ContractViolation, ...]
+    comms: Optional[comms.CommsReport] = None
+
+    def raise_if_failed(self) -> "ContractReport":
+        if not self.ok:
+            detail = "\n  ".join(str(v) for v in self.violations)
+            raise AssertionError(
+                f"CommsContract '{self.contract}' violated:\n  {detail}")
+        return self
+
+    def to_json(self) -> dict:
+        return {
+            "contract": self.contract,
+            "ok": self.ok,
+            "violations": [dataclasses.asdict(v) for v in self.violations],
+        }
+
+
+def _branch_jaxprs(eqn):
+    branches = eqn.params.get("branches", ())
+    return [jaxpr_walk.as_jaxpr(b) for b in branches]
+
+
+def _collective_count(jx) -> int:
+    counts = jaxpr_walk.primitive_counts(jx)
+    return sum(counts.get(p, 0) for p in COLLECTIVE_PRIMITIVES)
+
+
+def check_jaxpr(jx, contract: CommsContract,
+                label: Optional[str] = None) -> ContractReport:
+    """Prove ``contract`` over an already-traced jaxpr."""
+    violations = []
+    counts = jaxpr_walk.primitive_counts(jx)
+    report = comms.analyze_jaxpr(jx, label=label or contract.name)
+
+    for prim, want in (contract.total_counts or {}).items():
+        got = counts.get(prim, 0)
+        if got != want:
+            violations.append(ContractViolation(
+                "total_counts", f"{prim}: expected {want}, found {got}"))
+
+    for prim, cap in (contract.max_total or {}).items():
+        got = counts.get(prim, 0)
+        if got > cap:
+            violations.append(ContractViolation(
+                "max_total", f"{prim}: at most {cap} allowed, found {got}"))
+
+    for prim in contract.forbid:
+        got = counts.get(prim, 0)
+        if got:
+            violations.append(ContractViolation(
+                "forbid", f"{prim} is forbidden, found {got}"))
+
+    needs_round = (contract.round_collectives is not None
+                   or contract.max_round_collectives is not None
+                   or contract.converged_branch_pure)
+    round_body = jaxpr_walk.find_round_scan(jx) if needs_round else None
+    if needs_round and round_body is None:
+        violations.append(ContractViolation(
+            "round_scan", "no scan with an all_gather in its body "
+            "(splitter-round scan not found)"))
+
+    if round_body is not None:
+        per_round = jaxpr_walk.primitive_counts(round_body)
+        for prim, want in (contract.round_collectives or {}).items():
+            got = per_round.get(prim, 0)
+            if got != want:
+                violations.append(ContractViolation(
+                    "round_collectives",
+                    f"{prim} per round: expected {want}, found {got}"))
+        if contract.max_round_collectives is not None:
+            got = sum(per_round.get(p, 0) for p in COLLECTIVE_PRIMITIVES)
+            if got > contract.max_round_collectives:
+                violations.append(ContractViolation(
+                    "max_round_collectives",
+                    f"round body issues {got} collectives, cap is "
+                    f"{contract.max_round_collectives}"))
+        if contract.converged_branch_pure:
+            for eqn in jaxpr_walk.walk_eqns(round_body):
+                if eqn.primitive.name != "cond":
+                    continue
+                branch_costs = [_collective_count(b)
+                                for b in _branch_jaxprs(eqn)]
+                if branch_costs and min(branch_costs) > 0:
+                    violations.append(ContractViolation(
+                        "converged_branch_pure",
+                        "every branch of a round-scan cond issues "
+                        f"collectives ({branch_costs}); the converged "
+                        "early-exit branch must be communication-free"))
+
+    if contract.gather_widths is not None:
+        got_widths = jaxpr_walk.gather_operand_cols(jx)
+        if got_widths != list(contract.gather_widths):
+            violations.append(ContractViolation(
+                "gather_widths",
+                f"all_gather operand widths {got_widths}, expected "
+                f"{list(contract.gather_widths)}"))
+
+    return ContractReport(contract=contract.name, ok=not violations,
+                          violations=tuple(violations), comms=report)
+
+
+def check_program(fn: Callable, args: Sequence[Any],
+                  contract: CommsContract) -> ContractReport:
+    """Trace ``fn(*args)`` (ShapeDtypeStructs welcome) and prove contract."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    return check_jaxpr(jaxpr, contract,
+                       label=getattr(fn, "__name__", contract.name))
+
+
+def check_batch_invariance(
+        make_program: Callable[[int], Tuple[Callable, Sequence[Any]]],
+        contract: CommsContract,
+        batches: Tuple[int, int] = (1, 8)) -> ContractReport:
+    """Prove the contract's ``batch_invariant`` collective counts do not
+    grow with B: ``make_program(batch) -> (fn, args)`` is traced at both
+    batch sizes and the named primitive totals must be equal."""
+    prims = contract.batch_invariant or COLLECTIVE_PRIMITIVES
+    violations = []
+    counted = {}
+    for b in batches:
+        fn, args = make_program(b)
+        counted[b] = jaxpr_walk.primitive_counts(jax.make_jaxpr(fn)(*args))
+    lo, hi = batches
+    for prim in prims:
+        if counted[lo].get(prim, 0) != counted[hi].get(prim, 0):
+            violations.append(ContractViolation(
+                "batch_invariant",
+                f"{prim}: {counted[lo].get(prim, 0)} at B={lo} but "
+                f"{counted[hi].get(prim, 0)} at B={hi} — per-round "
+                "collectives must be fused across the batch"))
+    return ContractReport(contract=f"{contract.name}[batch]",
+                          ok=not violations, violations=tuple(violations))
+
+
+# ------------------------------------------------------------------ registry
+
+_REGISTRY: Dict[str, CommsContract] = {}
+
+
+def register_contract(key: str, contract: CommsContract) -> CommsContract:
+    """Register a contract under ``key`` (idempotent for equal contracts)."""
+    existing = _REGISTRY.get(key)
+    if existing is not None and existing != contract:
+        raise ValueError(f"conflicting contract already registered: {key}")
+    _REGISTRY[key] = contract
+    return contract
+
+
+def get_contract(key: str) -> CommsContract:
+    try:
+        return _REGISTRY[key]
+    except KeyError:
+        raise KeyError(
+            f"no contract registered under {key!r}; known: "
+            f"{sorted(_REGISTRY)}") from None
+
+
+def registered_contracts() -> Dict[str, CommsContract]:
+    return dict(_REGISTRY)

@@ -1,0 +1,110 @@
+"""One shared recursive jaxpr traversal.
+
+Every structural assertion in the repo (tests, contracts, the lint CLI)
+walks jaxprs the same way: visit each equation in program order, then
+recurse into any sub-jaxpr carried in its params — scan/while bodies,
+cond branches, closed_call/pjit/custom_* bodies, and shard_map programs
+all store their inner jaxprs as params values, singly or in lists/tuples
+(cond's ``branches``). This module is the single implementation; the
+test-local walkers in test_sort_batched.py and test_semisort.py were
+ported onto it verbatim.
+
+Traversal order is pre-order (equation first, then its sub-jaxprs), so
+operand captures like :func:`gather_operand_cols` report collectives in
+program order.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Iterator, Optional
+
+try:  # jax 0.4.x
+    from jax.core import ClosedJaxpr, Jaxpr
+except ImportError:  # pragma: no cover - newer jax moved these
+    from jax.extend.core import ClosedJaxpr, Jaxpr  # type: ignore
+
+__all__ = [
+    "as_jaxpr",
+    "sub_jaxprs",
+    "walk_eqns",
+    "primitive_counts",
+    "gather_operand_cols",
+    "find_scan",
+    "find_round_scan",
+]
+
+#: Collective primitives the cost model and contracts reason about.
+COLLECTIVE_PRIMITIVES = (
+    "all_gather",
+    "all_to_all",
+    "psum",
+    "ppermute",
+    "ragged_all_to_all",
+    "pmax",
+    "pmin",
+)
+
+
+def as_jaxpr(jx: Any) -> Jaxpr:
+    """Unwrap ClosedJaxpr -> Jaxpr; pass Jaxpr through unchanged."""
+    if isinstance(jx, ClosedJaxpr):
+        return jx.jaxpr
+    if isinstance(jx, Jaxpr):
+        return jx
+    raise TypeError(f"not a jaxpr: {type(jx).__name__}")
+
+
+def sub_jaxprs(eqn) -> Iterator[Jaxpr]:
+    """Yield every sub-jaxpr carried in an equation's params.
+
+    Params values may hold a ClosedJaxpr/Jaxpr directly (scan's ``jaxpr``,
+    pjit's ``jaxpr``, shard_map's ``jaxpr``) or a list/tuple of them
+    (cond's ``branches``). Anything else is skipped.
+    """
+    for v in eqn.params.values():
+        for s in (v if isinstance(v, (list, tuple)) else [v]):
+            if isinstance(s, (ClosedJaxpr, Jaxpr)):
+                yield as_jaxpr(s)
+
+
+def walk_eqns(jx: Any) -> Iterator[Any]:
+    """Pre-order generator over every equation, recursing into sub-jaxprs."""
+    for eqn in as_jaxpr(jx).eqns:
+        yield eqn
+        for s in sub_jaxprs(eqn):
+            yield from walk_eqns(s)
+
+
+def primitive_counts(jx: Any, counts: Optional[dict] = None) -> dict:
+    """Count primitives by name across the whole jaxpr, sub-jaxprs included.
+
+    Accepts an optional pre-seeded dict (accumulated in place and returned)
+    to match the signature the test-local walkers had.
+    """
+    counts = {} if counts is None else counts
+    for eqn in walk_eqns(jx):
+        counts[eqn.primitive.name] = counts.get(eqn.primitive.name, 0) + 1
+    return counts
+
+
+def gather_operand_cols(jx: Any) -> list:
+    """Last-axis width of every all_gather operand, in program order."""
+    return [int(eqn.invars[0].aval.shape[-1]) for eqn in walk_eqns(jx)
+            if eqn.primitive.name == "all_gather"]
+
+
+def find_scan(jx: Any, pred: Callable[[Jaxpr], bool]) -> Optional[Jaxpr]:
+    """First scan body (depth-first, program order) satisfying ``pred``."""
+    for eqn in as_jaxpr(jx).eqns:
+        for s in sub_jaxprs(eqn):
+            if eqn.primitive.name == "scan" and pred(s):
+                return s
+            found = find_scan(s, pred)
+            if found is not None:
+                return found
+    return None
+
+
+def find_round_scan(jx: Any) -> Optional[Jaxpr]:
+    """The splitter-round scan: the (only) scan whose body gathers."""
+    return find_scan(jx, lambda s: bool(primitive_counts(s).get("all_gather")))

@@ -1,0 +1,141 @@
+"""Host-sync and retrace lints for hot-path programs.
+
+Two failure modes silently wreck serving throughput without breaking any
+correctness test:
+
+* a device->host materialization (``np.asarray`` on a device array,
+  ``int()``/``bool()`` on a traced scalar's result) blocks the Python
+  thread on device completion mid-request;
+* an unkeyed or badly-keyed program re-traces and re-compiles on every
+  call instead of hitting the executable cache.
+
+:func:`assert_sync_free_trace` proves sync-freedom structurally, on any
+backend: it traces the program with abstract values, so a concretizing
+``int()``/``np.asarray()`` raises and is converted into a typed
+:class:`HostSyncViolation`. :func:`assert_no_host_sync` runs a callable
+under ``jax.transfer_guard_device_to_host("disallow")`` — a runtime net
+for syncs on concrete intermediates, effective only where device memory
+is distinct from host memory (see :func:`transfer_guard_effective`).
+:func:`audit_retrace` snapshots the executable-cache counters around a
+repeat call: the second call into the same shape bucket must add zero
+traces and at least one hit.
+
+Plan-time scalar syncs (dtype key-range probes in ``make_plan``, the
+overflow retry policy) are documented and bounded; lints therefore scope
+the transfer guard to the jitted launch phase and audit the full front
+doors through the retrace counters instead.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Callable, Iterator
+
+import jax
+
+__all__ = [
+    "HostSyncViolation",
+    "RetraceViolation",
+    "no_host_sync",
+    "assert_no_host_sync",
+    "assert_sync_free_trace",
+    "transfer_guard_effective",
+    "audit_retrace",
+]
+
+
+class HostSyncViolation(AssertionError):
+    """A device->host transfer happened inside a no-sync region."""
+
+
+class RetraceViolation(AssertionError):
+    """A warm-cache repeat call re-traced instead of hitting the cache."""
+
+
+@contextlib.contextmanager
+def no_host_sync() -> Iterator[None]:
+    """Region in which any implicit device->host transfer raises."""
+    try:
+        with jax.transfer_guard_device_to_host("disallow"):
+            yield
+    except Exception as e:  # jax raises plain Exceptions for guard trips
+        if "transfer" in str(e).lower() or "disallow" in str(e).lower():
+            raise HostSyncViolation(
+                f"device->host sync inside a no-sync region: {e}") from e
+        raise
+
+
+def assert_no_host_sync(fn: Callable, *args: Any, **kwargs: Any) -> Any:
+    """Call ``fn`` under the transfer guard; raise HostSyncViolation on any
+    implicit device->host materialization. Returns fn's result.
+
+    The guard only observes real device->host transfers; on the ``cpu``
+    backend arrays are host-resident and nothing ever trips it (see
+    :func:`transfer_guard_effective`). Use :func:`assert_sync_free_trace`
+    for a backend-independent structural proof.
+    """
+    with no_host_sync():
+        return fn(*args, **kwargs)
+
+
+def transfer_guard_effective() -> bool:
+    """Whether the runtime transfer guard can observe anything here. On the
+    ``cpu`` backend device buffers *are* host memory, so a device->host
+    "transfer" is a zero-copy view and the guard never fires."""
+    return jax.default_backend() != "cpu"
+
+
+def assert_sync_free_trace(fn: Callable, *args: Any, **kwargs: Any) -> Any:
+    """Statically prove ``fn`` cannot host-sync on its data path.
+
+    Traces ``fn`` with abstract values (``jax.eval_shape``): any
+    ``int()`` / ``bool()`` / ``np.asarray()`` on a traced value has to
+    concretize the tracer and raises, which we convert into a typed
+    :class:`HostSyncViolation`. Unlike the transfer guard this works on
+    every backend — a function that traces abstractly *cannot* block on
+    device results at run time. Returns the output ShapeDtypeStructs.
+    """
+    sync_errors = tuple(
+        e for e in (getattr(jax.errors, n, None)
+                    for n in ("ConcretizationTypeError",
+                              "TracerArrayConversionError",
+                              "TracerBoolConversionError",
+                              "TracerIntegerConversionError"))
+        if e is not None)
+    try:
+        return jax.eval_shape(fn, *args, **kwargs)
+    except sync_errors as e:
+        raise HostSyncViolation(
+            f"program concretizes a traced value (host-blocking sync on "
+            f"the launch path): {e}") from e
+
+
+def audit_retrace(fn: Callable, *args: Any, warmups: int = 1,
+                  **kwargs: Any) -> Any:
+    """Require that repeat calls hit the executable cache.
+
+    Calls ``fn`` ``warmups`` times to populate the cache, snapshots the
+    global :data:`repro.sort.driver.exec_cache` counters, then calls once
+    more: that call must add zero traces and at least one cache hit,
+    otherwise :class:`RetraceViolation` is raised. Programs that bypass
+    the cache (``cache_key=None``) retrace every call and are exactly what
+    this lint exists to flag. Returns the final call's result.
+    """
+    from repro.sort.driver import exec_cache
+
+    for _ in range(warmups):
+        fn(*args, **kwargs)
+    traces, hits = exec_cache.traces, exec_cache.hits
+    out = fn(*args, **kwargs)
+    d_traces = exec_cache.traces - traces
+    d_hits = exec_cache.hits - hits
+    if d_traces:
+        raise RetraceViolation(
+            f"warm repeat call re-traced ({d_traces} new trace(s)); the "
+            "program is unkeyed or its cache key varies across identical "
+            "calls")
+    if d_hits < 1:
+        raise RetraceViolation(
+            "warm repeat call recorded no executable-cache hit; the "
+            "program bypasses the cache entirely")
+    return out

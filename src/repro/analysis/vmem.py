@@ -1,0 +1,156 @@
+"""Static VMEM budgets for the three Pallas kernel families.
+
+The kernel block/tile constants are justified by the DESIGN.md Section 2.5
+math ("a VMEM pair-merge of runs of length R holds 2R keys plus double
+buffering: 4*2R*itemsize"); this module *evaluates* that math for a
+candidate configuration against a per-platform budget, so an oversized
+block fails at lint time with the arithmetic in the message instead of at
+Mosaic compile time (or, worse, only on hardware).
+
+Footprints model the per-grid-step VMEM residency of each kernel:
+
+bitonic block sort   one block of B keys, double buffered      2*B*w
+VMEM pair merge      a 2R-key pair, double buffered            4*2R*w
+HBM strided pass     a (2, cols) tile, double buffered         2*2*cols*w
+probe histogram      (T,) keys + (M,) probes + (T, M) int32
+                     compare matrix + (M,) int32 accumulator
+
+All sizes are rounded up to the platform's native tile (8x128 lanes on
+TPU) before costing, the way Mosaic lays them out.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+from repro.kernels.bitonic_sort import ops as bitonic_ops
+from repro.kernels.histogram import ops as histogram_ops
+from repro.kernels.merge import kernel as merge_kernel
+
+__all__ = [
+    "VmemBudgetError",
+    "KernelFootprint",
+    "vmem_budget_bytes",
+    "block_sort_footprint",
+    "pair_merge_footprint",
+    "hbm_pass_footprint",
+    "histogram_footprint",
+    "check_kernel_budgets",
+    "default_footprints",
+]
+
+#: Usable VMEM per core. TPU cores expose ~16 MiB; we budget against a
+#: reserve so the kernel coexists with surrounding buffers (semaphores,
+#: scalar prefetch, the compiler's own scratch).
+PLATFORM_VMEM_BYTES = {"tpu": 16 * 1024 * 1024}
+RESERVE_FRACTION = 0.25          # leave 25% for the compiler and neighbors
+TILE_SUBLANES, TILE_LANES = 8, 128   # f32 native tile
+
+
+class VmemBudgetError(AssertionError):
+    """A kernel configuration exceeds the platform VMEM budget."""
+
+
+def vmem_budget_bytes(platform: str = "tpu") -> int:
+    total = PLATFORM_VMEM_BYTES[platform]
+    return int(total * (1 - RESERVE_FRACTION))
+
+
+def _tiled(n: int) -> int:
+    """Elements of a 1-D block after padding to the native (8,128) tile."""
+    tile = TILE_SUBLANES * TILE_LANES
+    return -(-n // tile) * tile
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelFootprint:
+    family: str                 # "bitonic_sort" | "merge" | "histogram"
+    config: str                 # human-readable parameter string
+    vmem_bytes: int             # modeled per-grid-step residency
+    formula: str                # the arithmetic, for the failure message
+
+    def check(self, platform: str = "tpu") -> "KernelFootprint":
+        budget = vmem_budget_bytes(platform)
+        if self.vmem_bytes > budget:
+            raise VmemBudgetError(
+                f"{self.family}[{self.config}] needs "
+                f"{self.vmem_bytes} B of VMEM ({self.formula}) but the "
+                f"{platform} budget is {budget} B "
+                f"({PLATFORM_VMEM_BYTES[platform]} B minus "
+                f"{RESERVE_FRACTION:.0%} reserve)")
+        return self
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def block_sort_footprint(block: int, itemsize: int = 4) -> KernelFootprint:
+    """One bitonic sort block resident, double buffered: 2*B*w."""
+    nbytes = 2 * _tiled(block) * itemsize
+    return KernelFootprint(
+        family="bitonic_sort", config=f"block={block},w={itemsize}",
+        vmem_bytes=nbytes, formula=f"2*{_tiled(block)}*{itemsize}")
+
+
+def pair_merge_footprint(run: int, itemsize: int = 4) -> KernelFootprint:
+    """VMEM pair merge of runs of length R: 2R keys, in+out double
+    buffered — the DESIGN.md 4*2R*w term."""
+    nbytes = 4 * _tiled(2 * run) * itemsize
+    return KernelFootprint(
+        family="merge", config=f"run={run},w={itemsize}",
+        vmem_bytes=nbytes, formula=f"4*{_tiled(2 * run)}*{itemsize}")
+
+
+def hbm_pass_footprint(cols: int, itemsize: int = 4) -> KernelFootprint:
+    """Strided HBM pass: a (2, cols) tile, in+out double buffered."""
+    cols_t = -(-cols // TILE_LANES) * TILE_LANES
+    rows_t = TILE_SUBLANES   # the (2, cols) tile pads sublanes to 8
+    nbytes = 2 * rows_t * cols_t * itemsize   # padded tile, in + out
+    return KernelFootprint(
+        family="merge", config=f"hbm_pass,cols={cols},w={itemsize}",
+        vmem_bytes=nbytes, formula=f"2*{rows_t}*{cols_t}*{itemsize}")
+
+
+def histogram_footprint(tile: int, m: int, itemsize: int = 4,
+                        ) -> KernelFootprint:
+    """Probe-rank step: (T,) keys + (M,) probes + (T, M) int32 compare
+    matrix + (M,) int32 accumulator."""
+    t_t, m_t = _tiled(tile), _tiled(m)
+    nbytes = (t_t * itemsize          # key tile
+              + m_t * itemsize        # probe vector
+              + tile * m_t * 4        # comparison matrix (int32)
+              + m_t * 4)              # output accumulator
+    return KernelFootprint(
+        family="histogram", config=f"tile={tile},m={m},w={itemsize}",
+        vmem_bytes=nbytes,
+        formula=f"{t_t}*{itemsize} + {m_t}*{itemsize} + {tile}*{m_t}*4 "
+                f"+ {m_t}*4")
+
+
+def default_footprints(p: int = 256, itemsize: int = 4,
+                       ) -> Tuple[KernelFootprint, ...]:
+    """The shipped kernel configurations, costed at their constants.
+
+    ``p`` sizes the histogram probe vector: HSS probes O(p) splitter
+    candidates per round (sample cap), so we cost the histogram at the
+    largest M the lint matrix ships.
+    """
+    return (
+        block_sort_footprint(bitonic_ops.DEFAULT_BLOCK, itemsize),
+        pair_merge_footprint(bitonic_ops.MAX_RUN // 2, itemsize),
+        hbm_pass_footprint(merge_kernel.DEFAULT_COLS, itemsize),
+        histogram_footprint(histogram_ops.DEFAULT_TILE, int(p), itemsize),
+    )
+
+
+def check_kernel_budgets(platform: str = "tpu", p: int = 256,
+                         itemsizes: Tuple[int, ...] = (4, 8),
+                         ) -> Tuple[KernelFootprint, ...]:
+    """Cost every shipped configuration at every key width; raise
+    :class:`VmemBudgetError` on the first overflow."""
+    checked = []
+    for w in itemsizes:
+        for fp in default_footprints(p=p, itemsize=w):
+            checked.append(fp.check(platform))
+    return tuple(checked)

@@ -19,7 +19,6 @@ a worker thread, and `wait()` joins before the next save or at shutdown.
 """
 from __future__ import annotations
 
-import hashlib
 import json
 import os
 import shutil

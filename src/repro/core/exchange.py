@@ -42,6 +42,29 @@ import jax.numpy as jnp
 
 from repro.core.common import hi_sentinel, round_up
 
+#: Collectives each exchange strategy issues per (single-request) call —
+#: the static wire contract the analysis lint proves against the traced
+#: program. dense: payload + counts all_to_all, overflow psum before and
+#: truncation psum after; dense_spill: the dense channel (its pre-psum
+#: fused away by construction) + spill payload/count all_gathers + one
+#: truncation psum; allgather: payload + counts all_gather + truncation
+#: psum; ragged: counts + offsets all_to_all around one ragged_all_to_all
+#: (TPU-only — the lint can only trace it on toolchains that have the
+#: primitive). The batched variants fuse the same collectives across B
+#: for dense/allgather (B-invariant, also proven by the lint);
+#: dense_spill_batched and ragged_batched run per-row loops (documented
+#: above) and are exempt from batch invariance.
+EXCHANGE_COLLECTIVES = {
+    "dense": {"all_to_all": 2, "all_gather": 0, "psum": 2},
+    "dense_spill": {"all_to_all": 2, "all_gather": 2, "psum": 1},
+    "allgather": {"all_to_all": 0, "all_gather": 2, "psum": 1},
+    "ragged": {"all_to_all": 2, "all_gather": 0, "ragged_all_to_all": 1,
+               "psum": 0},
+}
+
+#: Batched exchange strategies whose collective count is B-invariant.
+BATCH_FUSED_STRATEGIES = ("dense", "allgather")
+
 
 def _kernels():
     """Deferred: repro.kernels modules import repro.core.common, whose

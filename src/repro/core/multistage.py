@@ -21,8 +21,7 @@ from repro.core.common import HSSConfig, hi_sentinel
 from repro.kernels import dispatch
 from repro.core.exchange import ExchangeConfig, exchange
 from repro.core.splitters import (
-    SplitterState, choose_splitters, init_state, refine, active_union_size,
-    gamma_membership, _sample_round,
+    SplitterState, choose_splitters, refine, active_union_size, _sample_round,
 )
 
 

@@ -14,11 +14,10 @@ All routines use numpy + a seeded Generator; no jax involvement.
 from __future__ import annotations
 
 import dataclasses
-import math
 
 import numpy as np
 
-from repro.core.common import auto_rounds, final_sampling_ratio, sampling_ratios
+from repro.core.common import auto_rounds, sampling_ratios
 
 
 @dataclasses.dataclass

@@ -25,7 +25,6 @@ logical-p simulator in repro.core.simulator.
 """
 from __future__ import annotations
 
-import math
 from typing import NamedTuple
 
 import jax
@@ -40,6 +39,15 @@ from repro.core.common import (
     sampling_ratios,
 )
 from repro.kernels import dispatch
+
+
+#: Collectives one non-converged HSS round issues — ONE all_gather of the
+#: sample buffer and ONE fused psum carrying the histogram + the
+#: (n_sample, overflow) scalars. The static-analysis contracts
+#: (repro.analysis.contracts) pin the round-scan body to exactly this;
+#: adding a collective to `do_round` without updating the contract fails
+#: `repro.analysis.lint`.
+ROUND_COLLECTIVES = {"all_gather": 1, "psum": 1}
 
 
 class SplitterState(NamedTuple):

@@ -14,7 +14,6 @@ sublane/lane shuffles for d < 128 and to vreg moves above.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, SHAPES, get_config, long_ctx_eligible
 from repro.configs.shapes import Shape

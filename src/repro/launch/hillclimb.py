@@ -14,10 +14,8 @@ import argparse
 import dataclasses
 import json
 
-import jax
-
 from repro.configs import SHAPES, get_config
-from repro.launch.dryrun import build_step, calibrated_costs, collective_bytes
+from repro.launch.dryrun import build_step, calibrated_costs
 from repro.launch.mesh import make_ctx, make_production_mesh
 from repro.models.flops import model_flops
 

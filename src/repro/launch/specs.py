@@ -9,7 +9,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.shapes import Shape
 from repro.models.config import ArchConfig
 from repro.models.lm import init_cache
-from repro.models.params import abstract_params, param_pspecs
+from repro.models.params import param_pspecs
 from repro.parallel.ctx import ParallelCtx
 
 

@@ -9,9 +9,6 @@ Zamba signature).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,6 @@ Two static paths:
 """
 from __future__ import annotations
 
-import functools
 import math
 
 import jax
@@ -29,7 +28,6 @@ from jax.sharding import PartitionSpec as P
 from repro.core.common import round_up
 from repro.models.layers import rmsnorm, swiglu
 from repro.parallel.compat import shard_map
-from repro.parallel.sharding import shard
 from repro.sort.grouping import counting_dispatch
 
 

@@ -12,7 +12,6 @@ import math
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.config import ArchConfig
 
@@ -176,6 +175,5 @@ def abstract_params(cfg: ArchConfig) -> dict:
 
 
 def param_pspecs(cfg: ArchConfig, ctx) -> dict:
-    from jax.sharding import PartitionSpec
     flat = {p: ctx.spec(*s.logical) for p, s in arch_layout(cfg).items()}
     return _nest(flat)

@@ -6,7 +6,6 @@ expressed via in_shardings + internal logical constraints.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

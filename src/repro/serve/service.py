@@ -55,7 +55,6 @@ import asyncio
 import dataclasses
 import threading
 import time
-from typing import Any
 
 import jax.numpy as jnp
 import numpy as np

@@ -103,7 +103,6 @@ def _class_ranks(group_ids, n_groups: int):
     (cls, rank, pos): each item's class, its 0-based stable rank within
     the class, and its position in the grouped (class-major, input-order
     within class) permutation."""
-    n = group_ids.shape[0]
     valid = (group_ids >= 0) & (group_ids < n_groups)
     cls = jnp.where(valid, group_ids, -1).astype(jnp.int32)
     onehot = cls[:, None] == jnp.arange(-1, n_groups, dtype=jnp.int32)[None]

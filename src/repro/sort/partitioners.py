@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import jax.random as jr
 
+from repro.analysis.contracts import CommsContract, register_contract
 from repro.core.ams import ams_sample_size, ams_splitters, scanning_splitters
 from repro.core.common import hi_sentinel, round_up
 from repro.core.exchange import exchange, exchange_batched
@@ -36,7 +37,7 @@ from repro.core.sample_sort import (
     default_regular_s, default_total_sample, random_sample_splitters,
     regular_sample_splitters)
 from repro.core.splitters import (
-    SplitterStats, hss_splitters, hss_splitters_batched)
+    ROUND_COLLECTIVES, SplitterStats, hss_splitters, hss_splitters_batched)
 from repro.kernels import dispatch
 from repro.sort.driver import factor_stages
 from repro.sort.spec import SortSpec
@@ -209,6 +210,43 @@ def available_algorithms() -> tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
+# Splitter-phase wire contracts, one per algorithm, proven over
+# `repro.analysis.programs.splitters_program` by the lint CLI. The full
+# pipeline's expected totals are these plus the strategy's row in
+# `repro.core.exchange.EXCHANGE_COLLECTIVES`. A splitter phase never
+# exchanges payload, so every contract bans all_to_all outright.
+_BATCH_INVARIANT = ("all_gather", "all_to_all", "psum", "ppermute")
+
+register_contract("splitters:hss", CommsContract(
+    name="splitters:hss",
+    description="k-round histogram refinement: ONE sample all_gather and "
+                "ONE fused rank/meta psum per round, converged rounds "
+                "communication-free",
+    total_counts={"all_gather": 1, "psum": 1, "all_to_all": 0},
+    round_collectives=dict(ROUND_COLLECTIVES),
+    converged_branch_pure=True,
+    batch_invariant=_BATCH_INVARIANT))
+
+register_contract("splitters:sample_random", CommsContract(
+    name="splitters:sample_random",
+    description="one Bernoulli sample all_gather + overflow/valid psums",
+    total_counts={"all_gather": 1, "psum": 2, "all_to_all": 0},
+    batch_invariant=_BATCH_INVARIANT))
+
+register_contract("splitters:sample_regular", CommsContract(
+    name="splitters:sample_regular",
+    description="one regular-sample all_gather, fully deterministic",
+    total_counts={"all_gather": 1, "psum": 0, "all_to_all": 0},
+    batch_invariant=_BATCH_INVARIANT))
+
+register_contract("splitters:ams", CommsContract(
+    name="splitters:ams",
+    description="one sample all_gather + overflow psum + ONE fused "
+                "histogram psum (the single scanning round)",
+    total_counts={"all_gather": 1, "psum": 2, "all_to_all": 0},
+    batch_invariant=_BATCH_INVARIANT))
+
+
 @register_partitioner("hss")
 class HSSPartitioner(Partitioner):
     """Histogram Sort with Sampling (the paper's algorithm, Section 4)."""
@@ -318,6 +356,16 @@ class AMSPartitioner(Partitioner):
         )(probes, ranks)
         return (keys, kranks, jnp.broadcast_to(ovf, (b,)),
                 null_stats_batched(b, jnp.where(ok, p - 1, 0)))
+
+
+#: Collectives of the two-stage pipeline *outside* its two exchanges: the
+#: group-split and intra-group splitter phases plus group-size bookkeeping
+#: psums. The lint's expected totals for a multistage program are this
+#: base plus 2 x `EXCHANGE_COLLECTIVES[strategy]` (one exchange per
+#: stage). Batched multistage runs a per-row trace loop (B x these
+#: counts — documented in `sharded_batched` below), so it is exempt from
+#: the batch-invariance contract.
+MULTISTAGE_BASE_COLLECTIVES = {"all_gather": 2, "psum": 7, "all_to_all": 0}
 
 
 @register_partitioner("multistage")

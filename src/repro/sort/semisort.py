@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.analysis.contracts import CommsContract, register_contract
 from repro.core.common import hi_sentinel, lo_sentinel, round_up
 from repro.core.splitters import heavy_candidates
 from repro.core.tagging import (
@@ -85,13 +86,45 @@ class SemisortOutput:
     groups first (ascending among themselves), then the sorted lights.
     A heavy key never also appears among the lights (its members are
     masked out before the light partition), so contiguity is global.
+
+    heavy_keys/heavy_counts materialize lazily: the front door returns
+    while the launch is still in flight, and the device->host copy (plus
+    the pad-slot filtering) happens on first access — never on the serving
+    hot path (pinned by the `purity` lint in tests/test_analysis.py).
     """
 
     def __init__(self, light, heavy_keys, heavy_counts, n):
         self.light = light
-        self.heavy_keys = heavy_keys
-        self.heavy_counts = heavy_counts
+        self._heavy_keys = heavy_keys
+        self._heavy_counts = heavy_counts
+        self._decode = None
         self.n = n
+
+    @classmethod
+    def deferred(cls, light, raw_keys, raw_counts, n, decode):
+        """Wrap still-on-device heavy stats; `decode` maps encoded keys
+        back to the caller dtype at materialization time."""
+        out = cls(light, raw_keys, raw_counts, n)
+        out._decode = decode
+        return out
+
+    def _materialize(self):
+        if self._decode is not None:
+            hk = np.asarray(self._decode(jnp.asarray(self._heavy_keys)))
+            hc = np.asarray(self._heavy_counts)
+            keep = hc > 0
+            self._heavy_keys, self._heavy_counts = hk[keep], hc[keep]
+            self._decode = None
+
+    @property
+    def heavy_keys(self):
+        self._materialize()
+        return self._heavy_keys
+
+    @property
+    def heavy_counts(self):
+        self._materialize()
+        return self._heavy_counts
 
     @property
     def overflow(self):
@@ -129,17 +162,43 @@ class SemisortOutput:
 class BatchedSemisortOutput:
     """B independent keys-only semisorts through one launch. heavy_keys /
     heavy_counts keep the full (B, max_heavy) candidate buffers; `request`
-    narrows to one request and drops its empty (count 0) slots."""
+    narrows to one request and drops its empty (count 0) slots. Like
+    SemisortOutput, the buffers materialize host-side lazily on first
+    access, not at launch time."""
 
     def __init__(self, light, heavy_keys, heavy_counts, n):
         self.light = light
-        self.heavy_keys = heavy_keys
-        self.heavy_counts = heavy_counts
+        self._heavy_keys = heavy_keys
+        self._heavy_counts = heavy_counts
+        self._decode = None
         self.n = n
+
+    @classmethod
+    def deferred(cls, light, raw_keys, raw_counts, n, decode):
+        out = cls(light, raw_keys, raw_counts, n)
+        out._decode = decode
+        return out
+
+    def _materialize(self):
+        if self._decode is not None:
+            self._heavy_keys = np.asarray(
+                self._decode(jnp.asarray(self._heavy_keys)))
+            self._heavy_counts = np.asarray(self._heavy_counts)
+            self._decode = None
+
+    @property
+    def heavy_keys(self):
+        self._materialize()
+        return self._heavy_keys
+
+    @property
+    def heavy_counts(self):
+        self._materialize()
+        return self._heavy_counts
 
     @property
     def batch(self) -> int:
-        return self.heavy_keys.shape[0]
+        return self._heavy_keys.shape[0]   # shape is metadata: no sync
 
     def request(self, b: int) -> SemisortOutput:
         hk, hc = self.heavy_keys[b], self.heavy_counts[b]
@@ -286,16 +345,19 @@ def _semisort_fast(x, spec: SortSpec):
         light = plan.decode(raw)
     stats = raw[5]
     if isinstance(stats, SemisortStats):
-        hk = np.asarray(plan._decode_keys(jnp.asarray(stats.heavy_keys)))
-        hc = np.asarray(stats.heavy_counts)
-    else:   # p == 1 short-circuit: fully sorted output, nothing was split
-        lead = (batch, 0) if batched else (0,)
-        hk = np.zeros(lead, np.asarray(light.shards).dtype)
-        hc = np.zeros(lead, np.int32)
+        # heavy stats stay on device: the device->host copy + decode +
+        # pad filtering happen lazily on first heavy_keys/heavy_counts
+        # access, so the front door itself never blocks on the launch.
+        cls = BatchedSemisortOutput if batched else SemisortOutput
+        return cls.deferred(light, stats.heavy_keys, stats.heavy_counts,
+                            plan.n, plan._decode_keys)
+    # p == 1 short-circuit: fully sorted output, nothing was split
+    lead = (batch, 0) if batched else (0,)
+    hk = np.zeros(lead, x.dtype)
+    hc = np.zeros(lead, np.int32)
     if batched:
         return BatchedSemisortOutput(light, hk, hc, plan.n)
-    keep = hc > 0
-    return SemisortOutput(light, hk[keep], hc[keep], plan.n)
+    return SemisortOutput(light, hk, hc, plan.n)
 
 
 def _semisort_tagged(x, spec: SortSpec, batched: bool):
@@ -439,6 +501,19 @@ def topk_program(mesh_plan, n_local: int, c: int, k: int,
     in_specs = (P(*names) if batch is None else P(None, *names),)
     return shard_map(per_shard, mesh=mesh_plan.mesh, in_specs=in_specs,
                      out_specs=P())
+
+
+# The wire contract of `topk_program`, proven by the analysis lint on every
+# CI run (with gather_widths pinned to the concrete c at check time): the
+# pruning claim above, stated as counts. Registered here, next to the
+# program it constrains.
+register_contract("top_k", CommsContract(
+    name="top_k",
+    description="shard-local pruning: ZERO all_to_all, exactly ONE "
+                "all_gather of the (c,) pruned suffix per shard",
+    total_counts={"all_to_all": 0, "all_gather": 1, "psum": 0,
+                  "ppermute": 0},
+    batch_invariant=("all_gather", "all_to_all", "psum", "ppermute")))
 
 
 def _topk_impl(enc, k, spec, float_bits, out_dtype, batch=None):

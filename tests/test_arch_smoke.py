@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import ARCH_IDS, smoke_config
-from repro.models.lm import forward, init_cache, lm_loss
+from repro.models.lm import forward
 from repro.models.params import init_params
 from repro.models.steps import make_serve_step, make_train_step, make_prefill_step
 from repro.optim import make_optimizer

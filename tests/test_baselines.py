@@ -1,7 +1,6 @@
 """Sample sort (random/regular) and AMS scanning baselines."""
 import numpy as np
 import jax.numpy as jnp
-import pytest
 
 from repro.core import (ExchangeConfig, ams_sort, gather_sorted, sample_sort)
 

@@ -4,7 +4,7 @@ import jax.numpy as jnp
 
 from repro.core.tagging import (
     float32_to_sortable_int32, pack_tagged, sortable_int32_to_float32,
-    tag_bits, unpack_tagged)
+    unpack_tagged)
 
 
 def test_float_sortable_bijection(rng):

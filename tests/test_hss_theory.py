@@ -1,7 +1,6 @@
 """Validation of the paper's analytical claims via the logical-p simulator."""
 import math
 
-import numpy as np
 import pytest
 
 from repro.core import auto_rounds

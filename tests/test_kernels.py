@@ -1,6 +1,5 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

@@ -1,8 +1,5 @@
 """Launch-layer units: HLO collective parser, specs, flops accounting."""
-import numpy as np
 import jax
-import jax.numpy as jnp
-import pytest
 
 
 def test_collective_parser_counts_bytes():

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core import ExchangeConfig, HSSConfig, two_stage_sort
+from repro.core import two_stage_sort
 
 
 @pytest.mark.parametrize("shape", [(2, 4), (4, 2)])

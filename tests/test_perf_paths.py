@@ -5,7 +5,6 @@ import dataclasses
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs import smoke_config
 from repro.models.moe import moe_ffn
@@ -72,7 +71,7 @@ def test_moe_fp8_wire_close_to_bf16(rng):
 def test_ring_cache_decode_matches_forward_past_window(rng):
     """zamba2 ring cache: decode beyond the window still matches the
     windowed teacher-forced forward (cache wraps around)."""
-    from repro.models.lm import forward, init_cache
+    from repro.models.lm import forward
     from repro.models.params import init_params
     from repro.models.steps import make_prefill_step, make_serve_step
     from repro.parallel import local_ctx

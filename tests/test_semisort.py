@@ -9,7 +9,6 @@ serving front door routes the new request kinds.
 
 Run explicitly with `pytest -m semisort` (also a CI step)."""
 import contextlib
-import dataclasses
 
 import numpy as np
 import jax
@@ -236,39 +235,15 @@ def test_topk_validates_k(rng):
 
 
 def _primitive_counts(jaxpr):
-    from jax.core import ClosedJaxpr, Jaxpr
-
-    def walk(jx, counts):
-        for eqn in jx.eqns:
-            counts[eqn.primitive.name] = counts.get(eqn.primitive.name, 0) + 1
-            for v in eqn.params.values():
-                for s in (v if isinstance(v, (list, tuple)) else [v]):
-                    if isinstance(s, ClosedJaxpr):
-                        walk(s.jaxpr, counts)
-                    elif isinstance(s, Jaxpr):
-                        walk(s, counts)
-        return counts
-
-    return walk(jaxpr.jaxpr, {})
+    # traversal shared with the contracts lint (repro.analysis)
+    from repro.analysis.jaxpr_walk import primitive_counts
+    return primitive_counts(jaxpr)
 
 
 def _gather_operand_cols(jaxpr):
     """Last-axis width of every all_gather operand in the program."""
-    from jax.core import ClosedJaxpr, Jaxpr
-
-    widths = []
-
-    def walk(jx):
-        for eqn in jx.eqns:
-            if eqn.primitive.name == "all_gather":
-                widths.append(int(eqn.invars[0].aval.shape[-1]))
-            for v in eqn.params.values():
-                for s in (v if isinstance(v, (list, tuple)) else [v]):
-                    if isinstance(s, (ClosedJaxpr, Jaxpr)):
-                        walk(s.jaxpr if isinstance(s, ClosedJaxpr) else s)
-
-    walk(jaxpr.jaxpr)
-    return widths
+    from repro.analysis.jaxpr_walk import gather_operand_cols
+    return gather_operand_cols(jaxpr)
 
 
 @pytest.mark.parametrize("batch", [None, 4])

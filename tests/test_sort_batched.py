@@ -141,8 +141,9 @@ def test_executable_cache_hit_no_retrace(rng):
 
 def _collective_counts(batch, *, p=8, n_local=128):
     """Primitive counts of the batched HSS shard program: total, and within
-    the splitter-round scan body (per-round costs)."""
-    from jax.core import ClosedJaxpr, Jaxpr
+    the splitter-round scan body (per-round costs). Traversal lives in
+    repro.analysis.jaxpr_walk (shared with the contracts lint)."""
+    from repro.analysis.jaxpr_walk import find_round_scan, primitive_counts
 
     mesh = jax.make_mesh((p,), ("sort",))
     part = get_partitioner("hss")
@@ -159,37 +160,10 @@ def _collective_counts(batch, *, p=8, n_local=128):
     jaxpr = jax.make_jaxpr(f)(
         jax.ShapeDtypeStruct((batch, p, n_local), jnp.int32), jr.key(0))
 
-    def walk(jx, counts):
-        for eqn in jx.eqns:
-            counts[eqn.primitive.name] = counts.get(eqn.primitive.name, 0) + 1
-            for v in eqn.params.values():
-                for s in (v if isinstance(v, (list, tuple)) else [v]):
-                    if isinstance(s, ClosedJaxpr):
-                        walk(s.jaxpr, counts)
-                    elif isinstance(s, Jaxpr):
-                        walk(s, counts)
-        return counts
-
-    def find_round_scan(jx):
-        # the splitter-round scan is the (only) scan whose body gathers
-        for eqn in jx.eqns:
-            subs = [s for v in eqn.params.values()
-                    for s in (v if isinstance(v, (list, tuple)) else [v])
-                    if isinstance(s, (ClosedJaxpr, Jaxpr))]
-            for s in subs:
-                sj = s.jaxpr if isinstance(s, ClosedJaxpr) else s
-                if eqn.primitive.name == "scan" and \
-                        walk(sj, {}).get("all_gather"):
-                    return sj
-                found = find_round_scan(sj)
-                if found is not None:
-                    return found
-        return None
-
-    total = walk(jaxpr.jaxpr, {})
+    total = primitive_counts(jaxpr.jaxpr, {})
     round_body = find_round_scan(jaxpr.jaxpr)
     assert round_body is not None, "splitter-round scan not found"
-    per_round = walk(round_body, {})
+    per_round = primitive_counts(round_body, {})
     return total, per_round
 
 

@@ -1,5 +1,4 @@
 """Optimizer / checkpoint / fault-tolerance / data-pipeline tests."""
-import os
 
 import numpy as np
 import jax
